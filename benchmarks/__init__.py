@@ -1,0 +1,1 @@
+"""Benchmark harness: one module function per paper table/figure."""

@@ -1,0 +1,66 @@
+"""Beyond-paper benchmark: what/when/where decisions over the 10 assigned
+LM architectures' GEMMs (the paper's methodology applied to the framework's
+own workloads).
+
+For each (arch x shape) the planner evaluates every GEMM and reports the
+CiM-offload fraction and projected energy gain — train/prefill shapes land
+in the paper's "CiM wins" regime, decode shapes in the "don't CiM" regime
+(Table V), which is exactly what gates the INT8 weight-stationary kernel
+path in repro.quant.planned_linear.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.llm_workloads import gemms_of_model
+from repro.core.planner import decide, standard_configs
+from repro.core import DIGITAL_6T, ANALOG_8T, CiMSystemConfig, configb_count
+
+
+def _dedupe(gemms):
+    seen = {}
+    for g in gemms:
+        key = (g.M, g.N, g.K)
+        if key in seen:
+            seen[key] = seen[key].scaled(count=seen[key].count + g.count)
+        else:
+            seen[key] = g
+    return list(seen.values())
+
+
+def planner_decisions(max_gemms_per_cell: int = 12):
+    cfgs = {
+        "Digital-6T@RF": CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF"),
+        "Digital-6T@SMEM-B": CiMSystemConfig(
+            prim=DIGITAL_6T, cim_level="SMEM",
+            n_prims=configb_count(DIGITAL_6T)),
+        "Analog-8T@RF": CiMSystemConfig(prim=ANALOG_8T, cim_level="RF"),
+    }
+    rows = []
+    for arch, mc in ARCHS.items():
+        for sname in ("train_4k", "decode_32k"):
+            shape = SHAPES[sname]
+            gemms = _dedupe(gemms_of_model(mc, shape))
+            gemms = sorted(gemms, key=lambda g: -g.ops * g.count
+                           )[:max_gemms_per_cell]
+            n_cim = 0
+            e_base = e_best = 0.0
+            for g in gemms:
+                d = decide(g, cfgs)
+                n_cim += d.use_cim
+                e_base += d.baseline.energy_pj * g.count
+                e_best += min(d.baseline.energy_pj,
+                              min(m.energy_pj for m in
+                                  d.options.values())) * g.count
+            rows.append({
+                "arch": arch, "shape": sname, "n_gemms": len(gemms),
+                "cim_fraction": n_cim / max(1, len(gemms)),
+                "energy_gain_x": e_base / max(e_best, 1e-9),
+            })
+    train_frac = [r["cim_fraction"] for r in rows
+                  if r["shape"] == "train_4k"]
+    dec_frac = [r["cim_fraction"] for r in rows
+                if r["shape"] == "decode_32k"]
+    return rows, {
+        "mean_cim_fraction_train": sum(train_frac) / len(train_frac),
+        "mean_cim_fraction_decode": sum(dec_frac) / len(dec_frac),
+    }

@@ -1,0 +1,195 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Each function returns (rows, derived) where rows is a list of dicts
+(written as CSV by run.py) and derived is a {metric: value} summary used
+for the EXPERIMENTS.md reproduction checks.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+
+from repro.core import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T, GEMM,
+                        CiMSystemConfig, REAL_WORKLOADS, configb_count,
+                        evaluate, evaluate_baseline, random_search,
+                        square_sweep, synthetic_dataset)
+from repro.core.gemm import geomean
+
+PRIMS = {"Analog-6T": ANALOG_6T, "Analog-8T": ANALOG_8T,
+         "Digital-6T": DIGITAL_6T, "Digital-8T": DIGITAL_8T}
+D6_RF = CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF")
+
+
+def fig2_gemm_landscape():
+    """Fig. 2: ops vs algorithmic reuse for the real ML workloads."""
+    rows = []
+    for wl, gemms in REAL_WORKLOADS.items():
+        for g in gemms:
+            rows.append({"workload": wl, "M": g.M, "N": g.N, "K": g.K,
+                         "ops": g.ops, "algorithmic_reuse":
+                         round(g.algorithmic_reuse, 3),
+                         "count": g.count})
+    bert = [r for r in rows if r["workload"] == "BERT-Large"]
+    return rows, {"n_gemms": len(rows),
+                  "bert_max_reuse": max(r["algorithmic_reuse"]
+                                        for r in bert)}
+
+
+def fig7_table2_mapping_vs_heuristic(n_shapes: int = 24, seed: int = 0):
+    """Fig. 7 + Table II: priority mapper vs random heuristic search."""
+    shapes = synthetic_dataset(n_shapes, seed=seed) \
+        + REAL_WORKLOADS["BERT-Large"] + REAL_WORKLOADS["DLRM"]
+    rows = []
+    t_ours = t_heur = 0.0
+    for g in shapes:
+        t0 = time.perf_counter()
+        ours = evaluate(g, D6_RF)
+        t_ours += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        found = random_search(g, D6_RF, seed=seed, max_valid=150,
+                              max_consecutive_invalid=20_000)
+        t_heur += time.perf_counter() - t0
+        h = found.best
+        rows.append({
+            "M": g.M, "N": g.N, "K": g.K,
+            "tops_w_gain": ours.tops_per_w / h.tops_per_w,
+            "gflops_gain": ours.gflops / h.gflops,
+            "util_gain": ours.utilization / max(h.utilization, 1e-9),
+        })
+    derived = {
+        "tops_w_gain_geomean": geomean(r["tops_w_gain"] for r in rows),
+        "gflops_gain_geomean": geomean(r["gflops_gain"] for r in rows),
+        "util_gain_geomean": geomean(r["util_gain"] for r in rows),
+        "runtime_ours_s": round(t_ours, 3),
+        "runtime_heuristic_s": round(t_heur, 3),
+        "runtime_ratio": t_heur / max(t_ours, 1e-9),
+    }
+    return rows, derived
+
+
+def fig9_primitive_scatter(n: int = 120, seed: int = 1):
+    """Fig. 9: energy-efficiency vs throughput per primitive @ RF."""
+    shapes = synthetic_dataset(n, seed=seed)
+    rows = []
+    for pname, prim in PRIMS.items():
+        cfg = CiMSystemConfig(prim=prim, cim_level="RF")
+        for g in shapes:
+            m = evaluate(g, cfg)
+            rows.append({"primitive": pname, "M": g.M, "N": g.N, "K": g.K,
+                         "tops_per_w": m.tops_per_w, "gflops": m.gflops,
+                         "utilization": m.utilization})
+    best = {p: max(r["tops_per_w"] for r in rows if r["primitive"] == p)
+            for p in PRIMS}
+    gf = {p: max(r["gflops"] for r in rows if r["primitive"] == p)
+          for p in PRIMS}
+    return rows, {"best_tops_w": best, "max_gflops": gf}
+
+
+def fig10_dimension_sweeps():
+    """Fig. 10: metric trends vs weight/input/output matrix shapes."""
+    rows = []
+    sizes = [16, 32, 64, 128, 256, 512, 1024, 2048]
+    for X in sizes:                      # (a) weight matrix N=K=X, vary M
+        for M in sizes:
+            m = evaluate(GEMM(M, X, X), D6_RF)
+            rows.append({"sweep": "weight", "X": X, "var": M,
+                         "tops_per_w": m.tops_per_w, "gflops": m.gflops,
+                         "utilization": m.utilization})
+    for X in sizes:                      # (b) input matrix M=K=X, vary N
+        for N in sizes:
+            m = evaluate(GEMM(X, N, X), D6_RF)
+            rows.append({"sweep": "input", "X": X, "var": N,
+                         "tops_per_w": m.tops_per_w, "gflops": m.gflops,
+                         "utilization": m.utilization})
+    for X in sizes:                      # (c) output matrix M=N=X, vary K
+        for K in sizes:
+            m = evaluate(GEMM(X, X, K), D6_RF)
+            rows.append({"sweep": "output", "X": X, "var": K,
+                         "tops_per_w": m.tops_per_w, "gflops": m.gflops,
+                         "utilization": m.utilization})
+    w512 = [r for r in rows if r["sweep"] == "weight" and r["X"] == 512]
+    peak_m = max(w512, key=lambda r: r["tops_per_w"])
+    out256 = [r for r in rows if r["sweep"] == "output"
+              and r["var"] == 256]
+    return rows, {"weight512_best_M": peak_m["var"],
+                  "weight512_best_topsw": peak_m["tops_per_w"],
+                  "k256_mean_topsw": statistics.mean(
+                      r["tops_per_w"] for r in out256)}
+
+
+def fig11_12_memory_levels():
+    """Fig. 11/12: real workloads at RF vs SMEM (configA/B) vs baseline."""
+    rows = []
+    cfgs = {
+        "RF": CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF"),
+        "SMEM-A": CiMSystemConfig(
+            prim=DIGITAL_6T, cim_level="SMEM",
+            n_prims=CiMSystemConfig(prim=DIGITAL_6T,
+                                    cim_level="RF").resolved_n_prims()),
+        "SMEM-B": CiMSystemConfig(prim=DIGITAL_6T, cim_level="SMEM",
+                                  n_prims=configb_count(DIGITAL_6T)),
+    }
+    for wl, gemms in REAL_WORKLOADS.items():
+        for g in gemms:
+            base = evaluate_baseline(g)
+            row = {"workload": wl, "M": g.M, "N": g.N, "K": g.K,
+                   "baseline_tops_w": base.tops_per_w,
+                   "baseline_gflops": base.gflops}
+            for name, cfg in cfgs.items():
+                m = evaluate(g, cfg)
+                row[f"{name}_tops_w"] = m.tops_per_w
+                row[f"{name}_gflops"] = m.gflops
+                row[f"{name}_util"] = m.utilization
+            rows.append(row)
+    bert = [r for r in rows if r["workload"] == "BERT-Large"]
+    derived = {
+        "bert_rf_vs_baseline_topsw": geomean(
+            r["RF_tops_w"] / r["baseline_tops_w"] for r in bert),
+        "smemB_vs_rf_gflops": geomean(
+            r["SMEM-B_gflops"] / r["RF_gflops"] for r in rows
+            if r["M"] > 1),
+        "max_energy_gain": max(
+            max(r["RF_tops_w"], r["SMEM-B_tops_w"]) / r["baseline_tops_w"]
+            for r in rows),
+        "max_throughput_gain": max(
+            r["SMEM-B_gflops"] / r["baseline_gflops"] for r in rows),
+    }
+    return rows, derived
+
+
+def fig13_square_gemms():
+    """Appendix Fig. 13: square GEMMs, all primitives + tensor core."""
+    rows = []
+    for g in square_sweep(64, 8192):
+        base = evaluate_baseline(g)
+        row = {"X": g.M, "Tcore_fj_mac": 2e3 * base.energy_pj / g.ops,
+               "Tcore_gflops": base.gflops}
+        for pname, prim in PRIMS.items():
+            for level, np_ in (("RF", None),
+                               ("SMEM", configb_count(prim))):
+                cfg = CiMSystemConfig(prim=prim, cim_level=level,
+                                      n_prims=np_)
+                m = evaluate(g, cfg)
+                row[f"{pname}@{level}_fj_mac"] = 2 * m.fj_per_op
+                row[f"{pname}@{level}_gflops"] = m.gflops
+        rows.append(row)
+    big = rows[-1]
+    return rows, {
+        "a2_rf_fj_mac_at_8192": big["Analog-8T@RF_fj_mac"],
+        "a1_rf_fj_mac_at_8192": big["Analog-6T@RF_fj_mac"],
+        "d1_rf_gflops_at_8192": big["Digital-6T@RF_gflops"],
+        "a1_rf_gflops_at_8192": big["Analog-6T@RF_gflops"],
+    }
+
+
+def table6_workload_characteristics():
+    """Table VI: #MACs and algorithmic reuse (exact transcription check)."""
+    rows = []
+    for wl, gemms in REAL_WORKLOADS.items():
+        for g in gemms:
+            rows.append({"workload": wl, "M": g.M, "N": g.N, "K": g.K,
+                         "macs": g.macs,
+                         "reuse": round(g.algorithmic_reuse, 3)})
+    bert = next(r for r in rows if r["workload"] == "BERT-Large"
+                and r["M"] == 512 and r["N"] == 1024 and r["K"] == 1024)
+    return rows, {"bert_macs": bert["macs"], "bert_reuse": bert["reuse"]}

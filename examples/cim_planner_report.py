@@ -1,0 +1,33 @@
+"""WWW planner report over an assigned architecture: extract every GEMM of
+qwen2-moe (train_4k and decode_32k), run the what/when/where analysis,
+and print the per-GEMM verdicts — the paper's methodology applied to a
+modern MoE LM.
+
+  PYTHONPATH=src python examples/cim_planner_report.py
+"""
+from repro.configs import ARCHS, SHAPES
+from repro.core import CiMSystemConfig, DIGITAL_6T, configb_count, decide
+from repro.core.llm_workloads import gemms_of_model
+
+cfgs = {
+    "Digital-6T@RF": CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF"),
+    "Digital-6T@SMEM-B": CiMSystemConfig(
+        prim=DIGITAL_6T, cim_level="SMEM",
+        n_prims=configb_count(DIGITAL_6T)),
+}
+
+arch = ARCHS["qwen2-moe-a2.7b"]
+for shape_name in ("train_4k", "decode_32k"):
+    shape = SHAPES[shape_name]
+    gemms = gemms_of_model(arch, shape)
+    # unique shapes, largest first
+    uniq = {}
+    for g in gemms:
+        uniq.setdefault((g.M, g.N, g.K), g)
+    top = sorted(uniq.values(), key=lambda g: -g.ops * g.count)[:8]
+    print(f"\n=== {arch.name} x {shape_name} ({len(gemms)} GEMM kinds) ===")
+    print(f"{'GEMM':38s} {'reuse':>8s} {'verdict':>20s}")
+    for g in top:
+        d = decide(g, cfgs)
+        print(f"{str(g)[:38]:38s} {g.algorithmic_reuse:8.1f} "
+              f"{d.what:>20s}")

@@ -1,0 +1,30 @@
+"""Serve a small model with batched requests and a KV cache, with the
+planner-gated INT8 weight-stationary path on the prefill GEMMs.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+import jax
+
+from repro.configs import ARCHS, RunConfig, reduced
+from repro.core import GEMM, decide
+from repro.models import init
+from repro.serving import ServeSession
+
+cfg = reduced(ARCHS["mistral-nemo-12b"])
+rc = RunConfig(attn_impl="naive", remat=False)
+params = init(jax.random.PRNGKey(0), cfg)
+
+# what/when/where for the FULL arch's dominant serving GEMMs (the tiny
+# smoke model below serves; the planner reasons about production shapes)
+full = ARCHS["mistral-nemo-12b"]
+prefill_gemm = GEMM(1024, full.d_ff, full.d_model, label="prefill FFN")
+decode_gemm = GEMM(4, full.d_ff, full.d_model, label="decode FFN (bs=4)")
+for g in (prefill_gemm, decode_gemm):
+    d = decide(g)
+    print(f"{g.label:20s} -> {d.what} (use_cim={d.use_cim})")
+
+sess = ServeSession(cfg, rc, params, max_len=64, batch=4)
+prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab)
+out = sess.generate(prompt, n_new=24, temperature=0.8, seed=7)
+print("generated:", out.shape, "first row:",
+      [int(x) for x in jax.device_get(out[0])[:12]])

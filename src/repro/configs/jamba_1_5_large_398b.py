@@ -1,0 +1,5 @@
+"""Per-arch config module (assignment deliverable f): exposes CONFIG."""
+from .registry import JAMBA_1_5_LARGE_398B as CONFIG
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Per-arch config module (assignment deliverable f): exposes CONFIG."""
+from .registry import LLAMA4_SCOUT_17B_A16E as CONFIG
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

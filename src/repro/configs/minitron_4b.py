@@ -1,0 +1,5 @@
+"""Per-arch config module (assignment deliverable f): exposes CONFIG."""
+from .registry import MINITRON_4B as CONFIG
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

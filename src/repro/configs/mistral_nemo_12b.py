@@ -1,0 +1,5 @@
+"""Per-arch config module (assignment deliverable f): exposes CONFIG."""
+from .registry import MISTRAL_NEMO_12B as CONFIG
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,5 @@
+"""Per-arch config module (assignment deliverable f): exposes CONFIG."""
+from .registry import MUSICGEN_LARGE as CONFIG
+from .base import reduced
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,114 @@
+"""What/When/Where planner — the paper's three questions as a decision layer.
+
+For every GEMM of a workload it evaluates:
+  * the tensor-core baseline,
+  * each CiM primitive at RF (iso-area count),
+  * each CiM primitive at SMEM configA (RF count) and configB (16x),
+and reports the winner per objective.  In the LM framework this gates
+kernel selection: GEMMs whose best option is CiM-like (weight-stationary,
+large M, K within reduction reach) run the weight-stationary INT8 Pallas
+path; memory-bound M=1 decode GEMMs stay on the standard path (the paper's
+"when NOT to CiM" takeaway).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+from .baseline import evaluate_baseline
+from .cost_model import Metrics, evaluate
+from .gemm import GEMM
+from .memory import CiMSystemConfig, configb_count
+from .primitives import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T,
+                         CiMPrimitive)
+
+DEFAULT_PRIMS = (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T)
+
+
+def standard_configs(prims: Sequence[CiMPrimitive] = DEFAULT_PRIMS
+                     ) -> dict[str, CiMSystemConfig]:
+    """The paper's evaluated integration points."""
+    cfgs: dict[str, CiMSystemConfig] = {}
+    for p in prims:
+        cfgs[f"{p.name}@RF"] = CiMSystemConfig(prim=p, cim_level="RF")
+        cfgs[f"{p.name}@SMEM-A"] = CiMSystemConfig(
+            prim=p, cim_level="SMEM",
+            n_prims=CiMSystemConfig(prim=p, cim_level="RF").resolved_n_prims())
+        cfgs[f"{p.name}@SMEM-B"] = CiMSystemConfig(
+            prim=p, cim_level="SMEM", n_prims=configb_count(p))
+    return cfgs
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Per-GEMM what/when/where verdict."""
+    gemm: GEMM
+    baseline: Metrics
+    options: dict            # config name -> Metrics
+    best_energy: str         # config name (or "baseline")
+    best_throughput: str
+    use_cim: bool            # paper's "when": does any CiM option beat the
+                             # baseline in energy without losing throughput
+                             # by more than 2x?
+
+    @property
+    def what(self) -> str:
+        return self.best_energy
+
+    @property
+    def where(self) -> str:
+        name = self.best_energy
+        return name.split("@")[-1] if "@" in name else "PE"
+
+
+def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
+           order_mode: str = "exact",
+           throughput_floor: float = 0.5) -> Decision:
+    """What/when/where for one GEMM.
+
+    The deployable choice ("what") is the most energy-efficient option
+    among those keeping >= `throughput_floor` of the baseline's
+    throughput (a CiM deployment that collapses performance is not a
+    win — paper §VI-A's latency/parallelism trade-off)."""
+    configs = configs or standard_configs()
+    base = evaluate_baseline(gemm)
+    options = {name: evaluate(gemm, cfg, order_mode)
+               for name, cfg in configs.items()}
+    all_opts = dict(options)
+    all_opts["baseline"] = base
+    eligible = {n: m for n, m in all_opts.items()
+                if m.gflops >= throughput_floor * base.gflops}
+    best_e = max(eligible, key=lambda n: eligible[n].tops_per_w)
+    best_t = max(all_opts, key=lambda n: all_opts[n].gflops)
+    # "when": only deploy CiM for a *meaningful* energy win (paper Tab. V:
+    # low-reuse GEMVs show ~0 gain and lose throughput — not worth it)
+    use_cim = (best_e != "baseline"
+               and eligible[best_e].tops_per_w > 1.15 * base.tops_per_w)
+    return Decision(gemm=gemm, baseline=base, options=options,
+                    best_energy=best_e, best_throughput=best_t,
+                    use_cim=use_cim)
+
+
+def plan_workload(gemms: Iterable[GEMM],
+                  configs: dict[str, CiMSystemConfig] | None = None,
+                  order_mode: str = "exact") -> list[Decision]:
+    return [decide(g, configs, order_mode) for g in gemms]
+
+
+def summarize(decisions: Sequence[Decision]) -> dict:
+    """Aggregate what/when/where statistics over a workload."""
+    n = len(decisions)
+    cim_frac = sum(d.use_cim for d in decisions) / max(1, n)
+    wheres: dict[str, int] = {}
+    whats: dict[str, int] = {}
+    for d in decisions:
+        wheres[d.where] = wheres.get(d.where, 0) + 1
+        whats[d.what] = whats.get(d.what, 0) + 1
+    # energy-weighted speedups vs baseline
+    e_base = sum(d.baseline.energy_pj * d.gemm.count for d in decisions)
+    e_best = sum(min(d.baseline.energy_pj,
+                     min(m.energy_pj for m in d.options.values()))
+                 * d.gemm.count for d in decisions)
+    return {"n_gemms": n, "cim_fraction": cim_frac, "where": wheres,
+            "what": whats,
+            "energy_gain_x": e_base / e_best if e_best else 0.0}

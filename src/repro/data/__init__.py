@@ -1,0 +1,4 @@
+"""Deterministic sharded data pipeline."""
+from .pipeline import DataConfig, DataIterator, batch_at_step, data_config_for
+
+__all__ = ["DataConfig", "DataIterator", "batch_at_step", "data_config_for"]

@@ -1,0 +1,90 @@
+"""Deterministic synthetic token pipeline, sharded per host, with O(1)
+skip-ahead (fault-tolerant resume: the pipeline is a pure function of
+(seed, step, host), so restarting at step N replays nothing).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab: int = 32000
+    seq_len: int = 1024
+    global_batch: int = 8
+    n_hosts: int = 1
+    host_id: int = 0
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+
+def batch_at_step(cfg: DataConfig, step: int,
+                  n_codebooks: int = 0) -> dict:
+    """Materialize the (deterministic) batch for `step` on this host.
+
+    Tokens follow a mixture of repeated n-gram patterns so tiny models can
+    measurably learn (loss decreases) in integration tests.
+    """
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step),
+        cfg.host_id)
+    b, l = cfg.host_batch, cfg.seq_len
+    shape = (b, l + 1) if not n_codebooks else (b, l + 1, n_codebooks)
+    k1, k2 = jax.random.split(key)
+    # structured stream: x[t+1] = (x[t] * 5 + phase) % vocab with noise
+    start = jax.random.randint(k1, shape[:1] + shape[2:], 0, cfg.vocab)
+    steps = jnp.arange(l + 1)
+
+    def roll(s):
+        def f(x, _):
+            nxt = (x * 5 + 17) % cfg.vocab
+            return nxt, x
+        _, seq = jax.lax.scan(f, s, steps)
+        return seq
+    seq = jax.vmap(roll)(start)                     # (b, l+1, ...)
+    if n_codebooks:
+        seq = jnp.moveaxis(seq, 1, 1)               # already (b,l+1,nb)
+    noise = jax.random.bernoulli(k2, 0.05, seq.shape)
+    rnd = jax.random.randint(k2, seq.shape, 0, cfg.vocab)
+    seq = jnp.where(noise, rnd, seq)
+    return {"tokens": seq[:, :-1], "targets": seq[:, 1:]}
+
+
+class DataIterator:
+    """Stateful wrapper with checkpointable cursor."""
+
+    def __init__(self, cfg: DataConfig, start_step: int = 0,
+                 n_codebooks: int = 0):
+        self.cfg = cfg
+        self.step = start_step
+        self.n_codebooks = n_codebooks
+
+    def __next__(self):
+        b = batch_at_step(self.cfg, self.step, self.n_codebooks)
+        self.step += 1
+        return b
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    @classmethod
+    def restore(cls, cfg: DataConfig, state: dict, n_codebooks: int = 0):
+        assert state["seed"] == cfg.seed, "seed mismatch on resume"
+        return cls(cfg, start_step=state["step"], n_codebooks=n_codebooks)
+
+
+def data_config_for(model: ModelConfig, shape: ShapeConfig,
+                    n_hosts: int = 1, host_id: int = 0) -> DataConfig:
+    return DataConfig(vocab=model.vocab, seq_len=shape.seq_len,
+                      global_batch=shape.global_batch, n_hosts=n_hosts,
+                      host_id=host_id)

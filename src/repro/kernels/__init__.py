@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (VMEM-tiled) + jnp oracles.
+
+int8_gemm       — weight-stationary INT8 GEMM (the paper's CiM insight on TPU)
+flash_attention — blocked causal attention (prefill)
+decode_attention— flash-decoding over long KV caches (serve)
+"""
+from . import ops, ref
+from .int8_gemm import int8_gemm
+from .flash_attention import flash_attention
+from .decode_attention import decode_attention
+
+__all__ = ["ops", "ref", "int8_gemm", "flash_attention", "decode_attention"]

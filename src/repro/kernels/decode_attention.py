@@ -1,0 +1,84 @@
+"""Flash-decoding Pallas TPU kernel: one query token vs a long KV cache.
+
+Grid (batch*heads, S/block_kv) with online-softmax partials in VMEM —
+linear in cache length, the TPU counterpart of serving long_500k decode.
+A `length` scalar masks the invalid cache tail (prefetched via scalar
+grid arguments in SMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_kv: int, n_kv: int):
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)             # (1, d)
+    k = k_ref[0].astype(jnp.float32)             # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)  # (1, bkv)
+    s = s * (1.0 / (d ** 0.5))
+    pos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, block_kv: int = 512,
+                     interpret: bool = False):
+    """q: (bh, 1, d); caches: (bh, S, d); length: () int32 valid prefix.
+    Returns (bh, 1, d)."""
+    bh, one, d = q.shape
+    S = k_cache.shape[1]
+    bkv = min(block_kv, S)
+    assert S % bkv == 0
+    n_kv = S // bkv
+    length = jnp.asarray(length, jnp.int32).reshape((1,))
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_kv=bkv, n_kv=n_kv),
+        grid=(bh, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k_cache, v_cache)

@@ -1,0 +1,97 @@
+"""Blocked causal flash attention Pallas TPU kernel (online softmax).
+
+Grid (batch*heads, q_blocks, kv_blocks); kv innermost with running
+(m, l, acc) in VMEM scratch.  Causality skips fully-masked kv blocks via
+block-level masking (the lowered kernel still visits them; masked lanes
+contribute exp(-inf)=0).  Supports a sliding window (sub-quadratic local
+attention for llama4-scout).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            block_q: int, block_kv: int, n_kv: int, seq_offset: int,
+            window: int, causal: bool):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)
+    d = q.shape[-1]
+    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))
+
+    pos_q = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 0) + seq_offset
+    pos_k = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= pos_q >= pos_k
+    if window:
+        mask &= (pos_q - pos_k) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False):
+    """q: (bh, sq, d); k/v: (bh, sk, d).  Heads pre-folded into batch
+    (GQA expansion in the ops.py wrapper).  Returns (bh, sq, d)."""
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    bq, bkv = min(block_q, sq), min(block_kv, sk)
+    assert sq % bq == 0 and sk % bkv == 0
+    n_kv = sk // bkv
+    seq_offset = sk - sq      # queries are the tail of the kv sequence
+
+    return pl.pallas_call(
+        functools.partial(_kernel, block_q=bq, block_kv=bkv, n_kv=n_kv,
+                          seq_offset=seq_offset, window=window,
+                          causal=causal),
+        grid=(bh, sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bkv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,126 @@
+"""Weight-stationary INT8 GEMM Pallas TPU kernel — the paper's CiM insight
+adapted to the TPU memory hierarchy (DESIGN.md §3).
+
+CiM analogue on TPU:
+  * the (bk x bn) INT8 weight tile is the "CiM array": resident in VMEM,
+    reused across the whole M stream (weight-stationary, K->sublanes,
+    N->lanes);
+  * the MXU plays the Rp x Cp parallel MAC grid;
+  * partial sums accumulate in an f32 VMEM scratch across K steps (the
+    paper's in-array K reduction / temporal psum accumulation);
+  * block sizes come from the WWW mapping algorithm re-targeted at VMEM
+    capacity (core.tpu_adapter.choose_blocks).
+
+Grid: (M/bm, N/bn, K/bk), K innermost so each output tile's psums stay in
+VMEM (never spill to HBM — the paper's "K must fit the reduction
+capability" takeaway, enforced structurally).
+
+dataflow="ws" flips the grid to (N/bn, K/bk, M/bm): M becomes the
+innermost loop exactly as the paper's compute order (M < K < N), holding
+each weight tile stationary across the entire M stream at the cost of
+psum revisits to HBM — the paper-faithful variant, kept for ablation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel_os(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k: int):
+    """Output-stationary: grid (m, n, k), psums in VMEM scratch."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot(
+        x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[...] = (acc_ref[...]
+                      * s_ref[...].astype(jnp.float32)[None, :]
+                      ).astype(o_ref.dtype)
+
+
+def _kernel_ws(x_ref, w_ref, s_ref, o_ref, *, n_k: int):
+    """Weight-stationary (paper order M<K<N): grid (n, k, m); the weight
+    tile is revisited-stationary while M streams; psums accumulate in the
+    HBM-backed output window (the paper's temporal reduction)."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    acc = jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _scale():
+        total = o_ref[...].astype(jnp.float32) + acc
+        o_ref[...] = (total * s_ref[...].astype(jnp.float32)[None, :]
+                      ).astype(o_ref.dtype)
+
+    @pl.when(k != n_k - 1)
+    def _accum():
+        o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def int8_gemm(x, w_q, w_scale, *, block_m: int = 256, block_n: int = 256,
+              block_k: int = 512, dataflow: str = "os",
+              interpret: bool = False):
+    """y = x @ dequant(w_q)  with per-output-channel scales.
+
+    x: (M, K) bf16/f32; w_q: (K, N) int8; w_scale: (N,) f32.
+    Scale is applied on the last K step (valid because the scale is
+    per-output-channel, constant over K).
+
+    NOTE (ws dataflow): output accumulates across K grid steps in f32.
+    """
+    M, K = x.shape
+    K2, N = w_q.shape
+    assert K == K2 and w_scale.shape == (N,)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, \
+        f"shapes ({M},{N},{K}) not divisible by blocks ({bm},{bn},{bk})"
+    n_k = K // bk
+
+    if dataflow == "os":
+        grid = (M // bm, N // bn, n_k)
+        return pl.pallas_call(
+            functools.partial(_kernel_os, n_k=n_k),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda m, n, k: (m, k)),
+                pl.BlockSpec((bk, bn), lambda m, n, k: (k, n)),
+                pl.BlockSpec((bn,), lambda m, n, k: (n,)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda m, n, k: (m, n)),
+            out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, w_q, w_scale)
+
+    assert dataflow == "ws", dataflow
+    grid = (N // bn, n_k, M // bm)
+    return pl.pallas_call(
+        functools.partial(_kernel_ws, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda n, k, m: (m, k)),
+            pl.BlockSpec((bk, bn), lambda n, k, m: (k, n)),
+            pl.BlockSpec((bn,), lambda n, k, m: (n,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda n, k, m: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, w_q, w_scale)

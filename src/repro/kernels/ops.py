@@ -1,0 +1,75 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (tests, dry-run container) the kernels execute via interpret mode;
+on TPU they compile to Mosaic.  The wrappers handle GQA head folding and
+block-size selection through the WWW mapping adapter.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tpu_adapter import choose_blocks
+from . import decode_attention as _da
+from . import flash_attention as _fa
+from . import int8_gemm as _ig
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("dataflow", "block_m", "block_n",
+                                   "block_k", "interpret"))
+def int8_matmul(x, w_q, w_scale, dataflow: str = "os",
+                block_m: int = 0, block_n: int = 0, block_k: int = 0,
+                interpret: bool | None = None):
+    """y = x @ dequant(w_q); blocks auto-chosen by the WWW adapter."""
+    if interpret is None:
+        interpret = _on_cpu()
+    M, K = x.shape
+    N = w_q.shape[1]
+    if not (block_m and block_n and block_k):
+        block_m, block_n, block_k = choose_blocks(M, N, K)
+    return _ig.int8_gemm(x, w_q, w_scale, block_m=block_m,
+                         block_n=block_n, block_k=block_k,
+                         dataflow=dataflow, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                   "block_kv", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool | None = None):
+    """q: (b, sq, H, d); k/v: (b, sk, KV, d) GQA.  Returns (b, sq, H, d)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, sq, nh, d = q.shape
+    kv = k.shape[2]
+    if kv != nh:
+        k = jnp.repeat(k, nh // kv, axis=2)
+        v = jnp.repeat(v, nh // kv, axis=2)
+    fold = lambda t: t.swapaxes(1, 2).reshape(b * nh, t.shape[1], d)
+    o = _fa.flash_attention(fold(q), fold(k), fold(v), causal=causal,
+                            window=window, block_q=block_q,
+                            block_kv=block_kv, interpret=interpret)
+    return o.reshape(b, nh, sq, d).swapaxes(1, 2)
+
+
+@partial(jax.jit, static_argnames=("block_kv", "interpret"))
+def decode_attention(q, k_cache, v_cache, length, block_kv: int = 512,
+                     interpret: bool | None = None):
+    """q: (b, 1, H, d); caches: (b, S, KV, d); length: () int32."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, one, nh, d = q.shape
+    kv = k_cache.shape[2]
+    if kv != nh:
+        k_cache = jnp.repeat(k_cache, nh // kv, axis=2)
+        v_cache = jnp.repeat(v_cache, nh // kv, axis=2)
+    fold = lambda t: t.swapaxes(1, 2).reshape(b * nh, t.shape[1], d)
+    o = _da.decode_attention(fold(q), fold(k_cache), fold(v_cache), length,
+                             block_kv=block_kv, interpret=interpret)
+    return o.reshape(b, nh, 1, d).swapaxes(1, 2)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_gemm_ref(x, w_q, w_scale):
+    """x: (M, K) f32/bf16; w_q: (K, N) int8; w_scale: (N,) f32 per-channel.
+
+    y = x @ (w_q * scale) computed in f32."""
+    w = w_q.astype(jnp.float32) * w_scale[None, :].astype(jnp.float32)
+    return (x.astype(jnp.float32) @ w)
+
+
+def flash_attention_ref(q, k, v, causal=True, window: int = 0):
+    """q/k/v: (b, s, h, d) — matches models.attention.naive_causal."""
+    b, sq, nh, d = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        pos_q = jnp.arange(sq)[:, None] + (sk - sq)
+        pos_k = jnp.arange(sk)[None, :]
+        mask = pos_q >= pos_k
+        if window:
+            mask &= (pos_q - pos_k) < window
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """q: (b, h, d); caches: (b, S, h, d); length: () valid prefix."""
+    b, S, nh, d = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)

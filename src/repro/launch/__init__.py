@@ -1,0 +1,6 @@
+"""Launch layer: production mesh, dry-run driver, roofline, train/serve CLIs.
+
+NOTE: import repro.launch.dryrun only as __main__ (it pins
+XLA_FLAGS=--xla_force_host_platform_device_count=512 at import).
+"""
+from . import mesh, roofline, specs  # noqa: F401  (dryrun NOT imported here)

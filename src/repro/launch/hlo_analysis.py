@@ -1,0 +1,75 @@
+"""Post-partitioning HLO analysis: collective byte counting + op census.
+
+cost_analysis() has no collective traffic, so we parse the optimized
+(SPMD-partitioned, per-device) HLO text and sum the result-shape bytes of
+every collective op.  Ring all-reduce moves ~2x its payload per device;
+other collectives ~1x — the returned `collective_bytes` applies those
+factors (a consistent, iteration-comparable metric; see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+# e.g.:  %ar = f32[16,4096]{1,0} all-reduce(%x), replica_groups=...
+_OP_RE = re.compile(
+    r"(?:^|\s)(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"(\(?[a-z0-9]+\[[0-9,]*\][^ ]*\)?)\s+"
+    r"(" + "|".join(_COLLECTIVES) + r")[\s(.]")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_TRAFFIC_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0,
+                   "reduce-scatter": 1.0, "all-to-all": 1.0,
+                   "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Returns {"collective_bytes": float, "by_type": {op: {count, bytes}}}.
+
+    `collective_bytes` = sum over ops of result bytes x traffic factor —
+    the per-device payload crossing links.
+    """
+    by_type: dict = defaultdict(lambda: {"count": 0, "bytes": 0.0})
+    total = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # skip token/control-only collectives
+        b = _shape_bytes(shape_str)
+        if op.endswith("-start"):
+            op = op[:-6]
+        by_type[op]["count"] += 1
+        by_type[op]["bytes"] += b
+        total += b * _TRAFFIC_FACTOR[op]
+    return {"collective_bytes": total,
+            "by_type": {k: dict(v) for k, v in by_type.items()}}
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution",
+                                  "transpose", "reshape", "copy")) -> dict:
+    out = {}
+    for op in ops:
+        out[op] = len(re.findall(rf"= [^=]*\b{op}\(", hlo_text))
+    return out

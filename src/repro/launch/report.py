@@ -1,0 +1,106 @@
+"""Compile dry-run cell JSONs into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_cells(outdir: str, tag: str = "") -> list[dict]:
+    """tag='' loads only baseline cells (mesh part has no -variant
+    suffix); tag='xyz' loads only '<mesh>-xyz' variants."""
+    cells = []
+    for path in sorted(glob.glob(os.path.join(outdir, "*.json"))):
+        base = os.path.basename(path)[:-5]
+        parts = base.split(".")
+        if len(parts) < 3:
+            continue
+        mesh_part = parts[2]
+        cell_tag = mesh_part.split("-", 1)[1] if "-" in mesh_part else ""
+        if cell_tag != tag:
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(cells: list[dict]) -> str:
+    lines = ["| arch | shape | mesh | status | compile | HBM args/dev |",
+             "|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] == "ok":
+            mem = c.get("memory_analysis", {})
+            args_gb = mem.get("argument_size_in_bytes", 0) / 1e9
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+                f"{c.get('compile_s', '?')}s | {args_gb:.2f} GB |")
+        elif c["status"] == "skipped":
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"skipped (sub-quadratic rule) | — | — |")
+        else:
+            err = c.get("error", "?")[:60]
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"ERROR: {err} | — | — |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells: list[dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | bottleneck |"
+        " useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c["status"] != "ok" or c["mesh"] != mesh:
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_fraction']:.2f} | "
+            f"**{r['roofline_fraction']:.3f}** |")
+    return "\n".join(lines)
+
+
+def summarize(cells: list[dict]) -> dict:
+    ok = [c for c in cells if c["status"] == "ok"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    err = [c for c in cells if c["status"] == "error"]
+    worst = sorted((c for c in ok if c["mesh"] == "single"),
+                   key=lambda c: c["roofline"]["roofline_fraction"])
+    coll = sorted((c for c in ok if c["mesh"] == "single"),
+                  key=lambda c: -c["roofline"]["collective_s"])
+    return {
+        "n_ok": len(ok), "n_skipped": len(skipped), "n_error": len(err),
+        "errors": [(c["arch"], c["shape"], c["mesh"]) for c in err],
+        "worst_fraction": [(c["arch"], c["shape"],
+                            round(c["roofline"]["roofline_fraction"], 4))
+                           for c in worst[:5]],
+        "most_collective_bound": [
+            (c["arch"], c["shape"],
+             round(c["roofline"]["collective_s"], 3)) for c in coll[:5]],
+    }
+
+
+if __name__ == "__main__":
+    outdir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    cells = load_cells(outdir)
+    print("## Dry-run status\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single pod, 256 chips)\n")
+    print(roofline_table(cells, "single"))
+    print("\n## Roofline (multi-pod, 512 chips)\n")
+    print(roofline_table(cells, "multi"))
+    print("\n## Summary\n")
+    print(json.dumps(summarize(cells), indent=1))

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell —
+weak-type-correct, shardable, zero allocation (assignment deliverable e.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LONG_500K, ModelConfig, RunConfig, ShapeConfig
+from ..models import init as model_init
+from ..models import init_cache
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, l = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tok = sds((b, l, cfg.audio.n_codebooks), jnp.int32)
+    else:
+        tok = sds((b, l), jnp.int32)
+    specs = {"tokens": tok, "targets": tok}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = sds(
+            (b, cfg.vision.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, l = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        tok = sds((b, l, cfg.audio.n_codebooks), jnp.int32)
+    else:
+        tok = sds((b, l), jnp.int32)
+    specs = {"tokens": tok}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = sds(
+            (b, cfg.vision.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, rc: RunConfig,
+                       shape: ShapeConfig) -> dict:
+    """Token + KV-cache stand-ins for one serve_step (cache depth =
+    shape.seq_len, one new token)."""
+    b = shape.global_batch
+    nimg = cfg.vision.n_image_tokens if cfg.family == "vlm" else 0
+    cache = jax.eval_shape(
+        functools.partial(init_cache, cfg, rc, b, shape.seq_len,
+                          n_image_tokens=nimg))
+    if cfg.family == "audio":
+        tok = sds((b, 1, cfg.audio.n_codebooks), jnp.int32)
+    else:
+        tok = sds((b, 1), jnp.int32)
+    return {"cache": cache, "tokens": tok,
+            "pos": sds((), jnp.int32)}
+
+
+def param_shapes(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)   # PRNG key stand-in
+    return jax.eval_shape(
+        functools.partial(model_init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> bool:
+    """long_500k requires sub-quadratic attention (assignment note)."""
+    if shape.name == LONG_500K.name:
+        return cfg.sub_quadratic
+    return True

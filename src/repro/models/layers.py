@@ -1,0 +1,135 @@
+"""Shared model layers, pure-functional JAX (no flax dependency).
+
+Every layer is an (init, apply) pair over plain dict pytrees so that
+sharding rules can match on parameter path names.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --- initializers -----------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# --- norms -------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --- rotary embeddings --------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32)
+                            / d_head))
+
+
+def apply_rope(x, positions, theta: float = 1e6):
+    """x: (..., seq, heads, d_head); positions: (..., seq)."""
+    d_head = x.shape[-1]
+    freqs = rope_freqs(d_head, theta)                       # (d_head/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (.., s, d/2)
+    cos = jnp.cos(ang)[..., :, None, :]                     # (.., s, 1, d/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLPs ----------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff, dtype),
+            "w_up": dense_init(k2, d, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d, dtype)}
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w_gate"])
+    return (g * (x @ params["w_up"])) @ params["w_down"]
+
+
+# --- attention projections ------------------------------------------------------
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, d_head: int, dtype,
+              qkv_bias: bool):
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, n_heads * d_head, dtype),
+         "wk": dense_init(ks[1], d, n_kv * d_head, dtype),
+         "wv": dense_init(ks[2], d, n_kv * d_head, dtype),
+         "wo": dense_init(ks[3], n_heads * d_head, d, dtype,
+                          scale=1.0 / math.sqrt(n_heads * d_head))}
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), dtype)
+        p["bk"] = jnp.zeros((n_kv * d_head,), dtype)
+        p["bv"] = jnp.zeros((n_kv * d_head,), dtype)
+    return p
+
+
+def qkv_proj(params, x, n_heads: int, n_kv: int, d_head: int):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(b, s, n_heads, d_head),
+            k.reshape(b, s, n_kv, d_head),
+            v.reshape(b, s, n_kv, d_head))
+
+
+# --- misc -----------------------------------------------------------------------
+
+def unstack_tree(tree, i):
+    """Select layer i from a stacked (scanned) parameter tree."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def stack_trees(trees):
+    """Stack per-layer param trees into scan-ready arrays."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def init_stacked(key, n: int, init_fn):
+    """vmap an init function over layer indices (fast stacked init)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)

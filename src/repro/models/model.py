@@ -1,0 +1,414 @@
+"""Unified LM model covering all 10 assigned architectures.
+
+A model is a stack of *periods*: the smallest repeating layer pattern.
+Each period is a list of *slots*, each slot = (mixer, ffn) where
+mixer ∈ {attn, mamba, cross} and ffn ∈ {dense, moe, None}.  Parameters for
+slot s are stacked over periods, so the layer stack lowers to one
+lax.scan over periods (small HLO, fast compile, remat-friendly):
+
+  dense / moe / audio : period = [(attn, dense|moe)]
+  ssm (mamba2)        : period = [(mamba, None)]
+  hybrid (jamba)      : period = [(attn, ffn0), (mamba, ffn1) x 7],
+                        ffn_i = moe on odd global layer indices
+  vlm (llama3.2-v)    : period = [(attn, dense) x 4, (cross, dense)]
+
+Entry points:
+  init(key, cfg)                       -> params
+  forward(params, batch, cfg, rc)      -> logits / loss   (train, prefill)
+  init_cache(cfg, rc, batch, max_len)  -> cache pytree
+  decode_step(params, cache, tok, pos) -> logits, cache   (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from .attention import attend, decode_attend
+from .layers import (attn_init, apply_rope, dtype_of, embed_init,
+                     qkv_proj, rmsnorm, rmsnorm_init, swiglu, swiglu_init)
+from .mamba2 import (mamba_apply, mamba_cache_shapes, mamba_init)
+from .moe import moe_apply, moe_init
+
+
+def _batch_axes(rc: RunConfig):
+    axes = tuple(a for a in rc.batch_axes.split(",") if a)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    mixer: str          # "attn" | "mamba" | "cross"
+    ffn: str | None     # "dense" | "moe" | None
+
+
+def period_slots(cfg: ModelConfig) -> list[Slot]:
+    if cfg.family in ("dense", "audio"):
+        return [Slot("attn", "dense")]
+    if cfg.family == "moe":
+        return [Slot("attn", "moe")]
+    if cfg.family == "ssm":
+        return [Slot("mamba", None)]
+    if cfg.family == "hybrid":
+        slots = []
+        for i in range(cfg.attn_every):
+            mixer = "attn" if i == 0 else "mamba"
+            ffn = "moe" if (cfg.moe and i % cfg.moe.every_n_layers
+                            == cfg.moe.every_n_layers - 1) else "dense"
+            slots.append(Slot(mixer, ffn))
+        return slots
+    if cfg.family == "vlm":
+        ce = cfg.vision.cross_attn_every
+        return [Slot("attn", "dense")] * (ce - 1) + [Slot("cross", "dense")]
+    raise ValueError(cfg.family)
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    P = len(period_slots(cfg))
+    assert cfg.n_layers % P == 0, (cfg.n_layers, P)
+    return cfg.n_layers // P
+
+
+# --- init --------------------------------------------------------------------
+
+def _slot_init(key, slot: Slot, cfg: ModelConfig, dtype):
+    km, kf, kn1, kn2 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": rmsnorm_init(cfg.d_model, dtype)}
+    if slot.mixer in ("attn", "cross"):
+        p["attn"] = attn_init(km, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                              cfg.head_dim(), dtype, cfg.qkv_bias)
+    else:
+        p["mamba"] = mamba_init(km, cfg, dtype)
+    if slot.ffn is not None:
+        p["norm2"] = rmsnorm_init(cfg.d_model, dtype)
+        if slot.ffn == "dense":
+            p["mlp"] = swiglu_init(kf, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["moe"] = moe_init(kf, cfg, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    slots = period_slots(cfg)
+    np_ = n_periods(cfg)
+    k_emb, k_head, k_layers = jax.random.split(key, 3)
+    params: dict[str, Any] = {}
+    if cfg.family == "audio":
+        nb = cfg.audio.n_codebooks
+        keys = jax.random.split(k_emb, nb)
+        params["embed"] = jnp.stack(
+            [embed_init(k, cfg.vocab, cfg.d_model, dtype) for k in keys])
+        params["lm_head"] = jnp.stack(
+            [embed_init(k, cfg.vocab, cfg.d_model, dtype).T
+             for k in jax.random.split(k_head, nb)])
+    else:
+        params["embed"] = embed_init(k_emb, cfg.vocab, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(
+                k_head, cfg.vocab, cfg.d_model, dtype).T
+    params["final_norm"] = rmsnorm_init(cfg.d_model, dtype)
+
+    # stacked per-slot params over periods
+    slot_keys = jax.random.split(k_layers, len(slots))
+    stacked = []
+    for si, slot in enumerate(slots):
+        pkeys = jax.random.split(slot_keys[si], np_)
+        per = [_slot_init(k, slot, cfg, dtype) for k in pkeys]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    params["slots"] = stacked
+    return params
+
+
+# --- forward (train / prefill) --------------------------------------------------
+
+def _apply_mixer_full(slot: Slot, sp, x, cfg: ModelConfig, rc: RunConfig,
+                      image_kv=None, return_cache=False):
+    """Full-sequence mixer.  Returns (y, cache_entry_or_None)."""
+    h = rmsnorm(sp["norm1"], x, cfg.rmsnorm_eps)
+    if slot.mixer == "mamba":
+        y, (st, cv) = mamba_apply(sp["mamba"], h, cfg)
+        return y, ((st, cv) if return_cache else None)
+    nh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim()
+    if slot.mixer == "cross":
+        b, l, _ = x.shape
+        q = (h @ sp["attn"]["wq"]).reshape(b, l, nh, dh)
+        kimg, vimg = image_kv
+        # bidirectional attention onto image tokens (no mask)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                       _expand(kimg, nh).astype(jnp.float32))
+        s = s / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p,
+                       _expand(vimg, nh).astype(jnp.float32))
+        y = o.astype(x.dtype).reshape(b, l, nh * dh) @ sp["attn"]["wo"]
+        return y, ((kimg, vimg) if return_cache else None)
+    q, k, v = qkv_proj(sp["attn"], h, nh, kv, dh)
+    pos = jnp.arange(x.shape[1])[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    mode = rc.shard_attn or ("heads" if rc.shard_heads else "")
+    if mode:
+        # "heads": head-dim TP (GSPMD pads uneven head counts).
+        # "seq": context parallelism — queries shard over sequence (always
+        # mesh-divisible), K/V all-gather per layer (small for GQA).
+        # Batch axes MUST be pinned: a None batch dim lets GSPMD replicate
+        # the global batch (EXPERIMENTS.md §Perf iteration 4).
+        from jax.sharding import PartitionSpec as _P
+        ba = _batch_axes(rc)
+        spec = (_P(ba, None, "model", None) if mode == "heads"
+                else _P(ba, "model", None, None))
+        q = jax.lax.with_sharding_constraint(q, spec)
+        if mode == "heads":
+            k = jax.lax.with_sharding_constraint(k, spec)
+            v = jax.lax.with_sharding_constraint(v, spec)
+        else:
+            k = jax.lax.with_sharding_constraint(
+                k, _P(ba, None, None, None))
+            v = jax.lax.with_sharding_constraint(
+                v, _P(ba, None, None, None))
+    o = attend(q, k, v, impl=rc.attn_impl, chunk=rc.attn_chunk,
+               window=cfg.sliding_window, unroll=rc.scan_unroll > 0,
+               block_causal=rc.block_causal, q_chunk=rc.attn_q_chunk)
+    b, l, _ = x.shape
+    y = o.reshape(b, l, nh * dh) @ sp["attn"]["wo"]
+    return y, ((k, v) if return_cache else None)
+
+
+def _expand(t, nh):
+    rep = nh // t.shape[2]
+    return jnp.repeat(t, rep, axis=2) if rep > 1 else t
+
+
+def _apply_ffn(slot: Slot, sp, x, cfg: ModelConfig):
+    if slot.ffn is None:
+        return x, 0.0
+    h = rmsnorm(sp["norm2"], x, cfg.rmsnorm_eps)
+    if slot.ffn == "dense":
+        return x + swiglu(sp["mlp"], h), 0.0
+    y, aux = moe_apply(sp["moe"], h, cfg)
+    return x + y, aux
+
+
+def _project_image(params, cfg, image_embeds):
+    """Precompute per-period cross-attn K/V from the image-embedding stub."""
+    return image_embeds  # projected per-slot inside the scan
+
+
+def forward(params, tokens, cfg: ModelConfig, rc: RunConfig,
+            image_embeds=None):
+    """tokens: (b, l) int32, or (b, l, n_codebooks) for audio.
+    Returns logits (b, l, vocab) (audio: (b, l, nb, vocab))."""
+    slots = period_slots(cfg)
+    if cfg.family == "audio":
+        x = jnp.sum(jax.vmap(lambda e, t: e[t], in_axes=(0, 2),
+                             out_axes=2)(params["embed"], tokens), axis=2)
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(dtype_of(cfg.compute_dtype))
+
+    def _sp(t):
+        if not rc.sp_residual:
+            return t
+        from jax.sharding import PartitionSpec as _P
+        return jax.lax.with_sharding_constraint(
+            t, _P(_batch_axes(rc), "model", None))
+
+    def period_body(carry, period_params):
+        x, aux = carry
+        x = _sp(x)
+        for si, slot in enumerate(slots):
+            sp = period_params[si]
+            ikv = None
+            if slot.mixer == "cross":
+                b, limg, _ = image_embeds.shape
+                kvh, dh = cfg.n_kv_heads, cfg.head_dim()
+                kimg = (image_embeds @ sp["attn"]["wk"]
+                        ).reshape(b, limg, kvh, dh)
+                vimg = (image_embeds @ sp["attn"]["wv"]
+                        ).reshape(b, limg, kvh, dh)
+                ikv = (kimg, vimg)
+            y, _ = _apply_mixer_full(slot, sp, x, cfg, rc, image_kv=ikv)
+            x = _sp(x + y)
+            x, a = _apply_ffn(slot, sp, x, cfg)
+            x = _sp(x)
+            aux = aux + a
+        return (x, aux), None
+
+    body = period_body
+    if rc.remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if rc.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(period_body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               params["slots"],
+                               unroll=max(1, min(rc.scan_unroll,
+                                                 n_periods(cfg))))
+    x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+
+    if cfg.family == "audio":
+        logits = jnp.einsum("bld,ndv->blnv", x,
+                            params["lm_head"].astype(x.dtype))
+    else:
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(x.dtype)
+        logits = x @ head
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, rc: RunConfig):
+    """batch: {"tokens": ..., "targets": ..., ["image_embeds"]}.
+
+    The gold logit uses a masked sum over the vocab axis instead of
+    take_along_axis: identical numerics, but it keeps the reduction local
+    to a vocab-sharded logits tensor (a sharded-dim gather makes GSPMD
+    replicate the fp32 logits — tens of GB; §Perf iteration 4)."""
+    logits, aux = forward(params, batch["tokens"], cfg, rc,
+                          image_embeds=batch.get("image_embeds"))
+    tgt = batch["targets"]
+    if rc.shard_loss:
+        from jax.sharding import PartitionSpec as _P
+        ba = _batch_axes(rc)
+        spec = (_P(ba, None, None, "model") if cfg.family == "audio"
+                else _P(ba, None, "model"))
+        logits = jax.lax.with_sharding_constraint(logits, spec)
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_ids == tgt[..., None], lf, 0.0),
+                   axis=-1)
+    ce = jnp.mean(lse - gold)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# --- KV / state caches -----------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, rc: RunConfig, batch: int, max_len: int,
+               n_image_tokens: int = 0):
+    """Cache pytree: one entry per slot, stacked over periods."""
+    np_ = n_periods(cfg)
+    kv_dtype = dtype_of(rc.kv_cache_dtype) if rc.kv_cache_dtype != "int8" \
+        else jnp.int8
+    dh, kvh = cfg.head_dim(), cfg.n_kv_heads
+    caches = []
+    for slot in period_slots(cfg):
+        if slot.mixer == "attn":
+            shape = (np_, batch, max_len, kvh, dh)
+            caches.append({"k": jnp.zeros(shape, kv_dtype),
+                           "v": jnp.zeros(shape, kv_dtype)})
+            if rc.kv_cache_dtype == "int8":
+                caches[-1]["k_scale"] = jnp.zeros(
+                    (np_, batch, max_len, kvh), jnp.bfloat16)
+                caches[-1]["v_scale"] = jnp.zeros(
+                    (np_, batch, max_len, kvh), jnp.bfloat16)
+        elif slot.mixer == "cross":
+            shape = (np_, batch, n_image_tokens, kvh, dh)
+            caches.append({"k": jnp.zeros(shape, jnp.bfloat16),
+                           "v": jnp.zeros(shape, jnp.bfloat16)})
+        else:
+            sst, scv = mamba_cache_shapes(cfg, batch)
+            caches.append({"state": jnp.zeros((np_,) + sst, jnp.float32),
+                           "conv": jnp.zeros((np_,) + scv, jnp.bfloat16)})
+    return caches
+
+
+def _quantize_kv(t):
+    scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True) / 127.0 + 1e-8
+    return (jnp.round(t / scale).astype(jnp.int8),
+            scale[..., 0].astype(jnp.bfloat16))
+
+
+def _dequantize_kv(q, scale):
+    return q.astype(jnp.bfloat16) * scale[..., None]
+
+
+# --- decode -----------------------------------------------------------------------
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                rc: RunConfig):
+    """One decode step.  tokens: (b, 1) (audio: (b, 1, nb)); pos: () int32
+    current length (uniform across batch).  Returns (logits, new_cache)."""
+    slots = period_slots(cfg)
+    b = tokens.shape[0]
+    if cfg.family == "audio":
+        x = jnp.sum(jax.vmap(lambda e, t: e[t], in_axes=(0, 2),
+                             out_axes=2)(params["embed"], tokens), axis=2)
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(dtype_of(cfg.compute_dtype))
+    nh, kvh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim()
+
+    def period_body(x, scanned):
+        period_params, period_cache = scanned
+        new_cache = []
+        for si, slot in enumerate(slots):
+            sp, cache_s = period_params[si], period_cache[si]
+            h = rmsnorm(sp["norm1"], x, cfg.rmsnorm_eps)
+            if slot.mixer == "mamba":
+                y, (st, cv) = mamba_apply(
+                    sp["mamba"], h, cfg, state=cache_s["state"],
+                    conv_carry=cache_s["conv"], decode=True)
+                new_cache.append({"state": st, "conv": cv})
+            elif slot.mixer == "cross":
+                q = (h @ sp["attn"]["wq"]).reshape(b, 1, nh, dh)
+                o = decode_attend(
+                    q, cache_s["k"], cache_s["v"],
+                    jnp.full((b,), cache_s["k"].shape[1], jnp.int32))
+                y = o.reshape(b, 1, nh * dh) @ sp["attn"]["wo"]
+                new_cache.append(cache_s)
+            else:
+                q, k, v = qkv_proj(sp["attn"], h, nh, kvh, dh)
+                pvec = jnp.full((b, 1), pos, jnp.int32)
+                q = apply_rope(q, pvec, cfg.rope_theta)
+                k = apply_rope(k, pvec, cfg.rope_theta)
+                if rc.kv_cache_dtype == "int8":
+                    kq, ks = _quantize_kv(k)
+                    vq, vs = _quantize_kv(v)
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["k"], kq, pos, axis=1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["v"], vq, pos, axis=1)
+                    cks = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["k_scale"], ks, pos, axis=1)
+                    cvs = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["v_scale"], vs, pos, axis=1)
+                    kd = _dequantize_kv(ck, cks)
+                    vd = _dequantize_kv(cv, cvs)
+                    new_cache.append({"k": ck, "v": cv, "k_scale": cks,
+                                      "v_scale": cvs})
+                else:
+                    ck = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["k"], k.astype(cache_s["k"].dtype), pos,
+                        axis=1)
+                    cv = jax.lax.dynamic_update_slice_in_dim(
+                        cache_s["v"], v.astype(cache_s["v"].dtype), pos,
+                        axis=1)
+                    kd, vd = ck, cv
+                    new_cache.append({"k": ck, "v": cv})
+                lens = jnp.full((b,), pos + 1, jnp.int32)
+                o = decode_attend(q, kd, vd, lens,
+                                  window=cfg.sliding_window,
+                                  grouped=rc.gqa_einsum)
+                y = o.reshape(b, 1, nh * dh) @ sp["attn"]["wo"]
+            x = x + y
+            x, _ = _apply_ffn(slot, sp, x, cfg)
+        return x, new_cache
+
+    # scan over periods, threading per-period cache slices
+    x, new_caches = jax.lax.scan(
+        period_body, x, (params["slots"], cache),
+        unroll=max(1, min(rc.scan_unroll, n_periods(cfg))))
+    x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
+    if cfg.family == "audio":
+        logits = jnp.einsum("bld,ndv->blnv", x,
+                            params["lm_head"].astype(x.dtype))
+    else:
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"]).astype(x.dtype)
+        logits = x @ head
+    return logits, new_caches

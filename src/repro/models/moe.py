@@ -1,0 +1,95 @@
+"""Mixture-of-Experts FFN with scatter/gather dispatch (no dense one-hot
+einsum — keeps HLO FLOPs close to useful FLOPs, which matters for the
+roofline's MODEL_FLOPS / HLO_FLOPS ratio).
+
+Dispatch: top-k routing -> position-in-expert via cumsum -> scatter tokens
+into an (E, C, d) buffer -> batched expert matmuls -> weighted gather-back.
+Tokens beyond expert capacity are dropped (standard capacity-factor MoE).
+Under EP the (E, C, d) buffer is sharded on E over the model axis and the
+scatter/gather lower to all-to-alls.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import dense_init, swiglu, swiglu_init
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (m.n_experts, d, m.expert_d_ff),
+                                     jnp.float32) / d ** 0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (m.n_experts, d, m.expert_d_ff),
+                                   jnp.float32) / d ** 0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (m.n_experts, m.expert_d_ff, d),
+                                     jnp.float32)
+                   / m.expert_d_ff ** 0.5).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = swiglu_init(ks[4], d, m.shared_d_ff, dtype)
+    return p
+
+
+def capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(8, -(-c // 8) * 8)      # round up to 8
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (b, l, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, l, d = x.shape
+    T = b * l
+    xt = x.reshape(T, d)
+    C = capacity(cfg, T)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)    # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) assignment within its expert
+    flat_ids = expert_ids.reshape(-1)                        # (T*k,)
+    onehot = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                     # (T*k, E)
+    pos_in_expert = jnp.take_along_axis(
+        pos, flat_ids[:, None], axis=1)[:, 0]                # (T*k,)
+    keep = pos_in_expert < C
+
+    # scatter tokens into (E, C, d)
+    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+    buf = jnp.zeros((m.n_experts, C, d), x.dtype)
+    safe_pos = jnp.where(keep, pos_in_expert, C - 1)
+    contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
+    buf = buf.at[flat_ids, safe_pos].add(contrib)
+
+    # batched expert SwiGLU
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    eout = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+
+    # gather back with routing weights
+    back = eout[flat_ids, safe_pos]                          # (T*k, d)
+    w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
+    yt = jax.ops.segment_sum(back * w[:, None], tok_idx, num_segments=T)
+    y = yt.reshape(b, l, d)
+
+    if m.n_shared_experts:
+        y = y + swiglu(params["shared"], x)
+
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_ids[:, 0], m.n_experts, dtype=jnp.float32),
+        axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(frac_tokens * frac_probs) \
+        * m.router_aux_loss
+    return y, aux

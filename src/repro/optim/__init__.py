@@ -1,0 +1,8 @@
+"""Optimizers (pure JAX, no optax dependency)."""
+from .adamw import adamw_init, adamw_update
+from .adafactor import adafactor_init, adafactor_update
+from .api import make_optimizer
+from .schedule import linear_warmup_cosine
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init",
+           "adafactor_update", "make_optimizer", "linear_warmup_cosine"]

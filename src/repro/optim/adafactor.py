@@ -1,0 +1,60 @@
+"""Adafactor (factored second moment) — O(n+m) optimizer state for the
+very large assigned archs (jamba-398B, llama-3.2-vision-90B), where full
+Adam moments would not fit HBM at the production mesh size."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def adafactor_init(params):
+    def st(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"v": jax.tree.map(st, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, lr, *, decay=0.8, eps=1e-30,
+                     clip_threshold=1.0, weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def upd(p, g, v):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p):
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(vr.mean(axis=-1, keepdims=True),
+                                   eps)[..., None])
+            update = g32 * jax.lax.rsqrt(denom + eps)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nvv = beta2 * v["v"] + (1 - beta2) * g2
+            update = g32 * jax.lax.rsqrt(nvv + eps)
+            nv = {"v": nvv}
+        # update clipping (RMS <= clip_threshold)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + eps)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}

@@ -1,0 +1,18 @@
+"""Optimizer factory: (init_fn, update_fn) pairs keyed by RunConfig."""
+from __future__ import annotations
+
+from .adafactor import adafactor_init, adafactor_update
+from .adamw import adamw_init, adamw_update
+
+
+def make_optimizer(name: str, weight_decay: float = 0.1):
+    if name == "adamw":
+        def update(p, g, s, lr):
+            return adamw_update(p, g, s, lr, weight_decay=weight_decay)
+        return adamw_init, update
+    if name == "adafactor":
+        def update(p, g, s, lr):
+            return adafactor_update(p, g, s, lr,
+                                    weight_decay=weight_decay * 0.0)
+        return adafactor_init, update
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,54 @@
+"""INT8 gradient compression with error feedback (distributed-optimization
+trick for the cross-pod data-parallel all-reduce).
+
+Each worker quantizes its local gradient to int8 with a per-tensor scale,
+all-reduces the quantized values (8x fewer bytes over the slow pod
+interconnect), dequantizes, and carries the quantization residual into the
+next step (error feedback keeps the compression unbiased over time).
+
+Used inside shard_map over the ('pod',) axis — the intra-pod reduction
+stays full-precision (fast ICI), only the pod-level reduce is compressed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compressed_psum(grads, errors, axis_name: str):
+    """All-reduce `grads` over `axis_name` in int8 with error feedback.
+
+    Returns (reduced_grads_fp32_mean, new_errors).  Must run inside
+    shard_map/vmap with `axis_name` bound.
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quant(g32)
+        # sum int8 payloads in int32; scales are tiny, psum them too
+        qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        # each worker may have a different scale; communicate the max and
+        # requantize against it so the sum is consistent
+        smax = jax.lax.pmax(scale, axis_name)
+        q2 = jnp.clip(jnp.round(g32 / smax), -127, 127).astype(jnp.int32)
+        qsum = jax.lax.psum(q2, axis_name)
+        reduced = qsum.astype(jnp.float32) * smax / n
+        new_e = g32 - q2.astype(jnp.float32) * smax
+        return reduced, new_e
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (td.unflatten([o[0] for o in out]),
+            td.unflatten([o[1] for o in out]))

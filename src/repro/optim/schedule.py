@@ -1,0 +1,15 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, base_lr: float, warmup: int,
+                         total: int, min_frac: float = 0.1):
+    t = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, t / jnp.maximum(1.0, float(warmup)))
+    prog = jnp.clip((t - warmup) / jnp.maximum(1.0, float(total - warmup)),
+                    0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,6 @@
+"""INT8 quantization (paper's evaluation precision) + planner-gated linear."""
+from .int8 import (dequantize_weight, planned_linear, quantization_error,
+                   quantize_tree, quantize_weight)
+
+__all__ = ["quantize_weight", "dequantize_weight", "quantize_tree",
+           "planned_linear", "quantization_error"]

@@ -1,0 +1,63 @@
+"""INT8 post-training quantization (the paper's fixed evaluation precision)
++ the CiM-planner-gated quantized linear layer.
+
+`quantize_params` converts the weight matrices of a model to int8 with
+per-output-channel scales; `planned_linear` consults the WWW planner
+decision to route large-M GEMMs through the weight-stationary Pallas
+kernel and keep small-M (decode) GEMMs on the standard path — the paper's
+"when to CiM" answer, enforced at runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weight(w):
+    """(K, N) -> (int8 (K, N), f32 (N,)) per-output-channel symmetric."""
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_weight(q, scale):
+    return q.astype(jnp.float32) * scale[None, :]
+
+
+def quantize_tree(params, min_size: int = 1 << 16):
+    """Quantize every >=2D weight leaf above `min_size` elements.
+
+    Returns a tree of {"q": int8, "scale": f32} replacing those leaves."""
+    def q(p):
+        if hasattr(p, "ndim") and p.ndim == 2 and p.size >= min_size:
+            qw, s = quantize_weight(p)
+            return {"q": qw, "scale": s}
+        return p
+    return jax.tree.map(q, params)
+
+
+def planned_linear(x, w_q, w_scale, use_cim_path: bool,
+                   interpret: bool | None = None):
+    """y = x @ dequant(w) — routed per the planner decision.
+
+    use_cim_path=True  -> weight-stationary INT8 Pallas kernel
+    use_cim_path=False -> plain XLA matmul on the dequantized weights
+    (the paper: never deploy CiM for M=1 / low-reuse GEMMs).
+    """
+    if use_cim_path:
+        from ..kernels import ops
+        b_shape = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = ops.int8_matmul(x2, w_q, w_scale, interpret=interpret)
+        return y.reshape(*b_shape, w_q.shape[1]).astype(x.dtype)
+    w = dequantize_weight(w_q, w_scale).astype(x.dtype)
+    return x @ w
+
+
+def quantization_error(w, rtol_target: float = 0.02) -> float:
+    q, s = quantize_weight(w)
+    back = dequantize_weight(q, s)
+    num = jnp.linalg.norm(back - w.astype(jnp.float32))
+    den = jnp.linalg.norm(w.astype(jnp.float32)) + 1e-12
+    return float(num / den)

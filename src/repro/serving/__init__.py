@@ -1,0 +1,4 @@
+"""Serving: prefill + batched KV-cache decode."""
+from .engine import ServeSession, make_prefill, make_serve_step
+
+__all__ = ["ServeSession", "make_prefill", "make_serve_step"]

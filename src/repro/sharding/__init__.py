@@ -1,0 +1,4 @@
+"""Sharding rules (DP/FSDP/TP/EP + cache SP)."""
+from .rules import batch_specs, cache_specs, param_specs, to_named
+
+__all__ = ["param_specs", "batch_specs", "cache_specs", "to_named"]

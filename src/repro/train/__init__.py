@@ -1,0 +1,6 @@
+"""Training substrate: loop, checkpointing, fault tolerance."""
+from . import checkpoint, fault_tolerance, loop
+from .loop import TrainResult, make_train_step, train
+
+__all__ = ["checkpoint", "fault_tolerance", "loop", "train",
+           "make_train_step", "TrainResult"]

@@ -1,0 +1,138 @@
+"""Sharded checkpointing with atomic manifests (fault tolerance core).
+
+Layout:
+  <dir>/step_000123/
+    manifest.json            # tree structure, shapes, dtypes, step, status
+    shard_<host>.npz         # this host's param/opt shards (addressable)
+
+Protocol: write shards -> fsync -> write manifest last (atomic rename).
+A checkpoint without a manifest is incomplete and ignored on restore, so
+a crash mid-save can never corrupt the restore path.  `latest_step` +
+`restore` implement auto-resume; `restore_resharded` reloads onto a
+different device count (elastic scaling after node loss).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy .npz cannot store bfloat16 natively; round-trip via a uint16 view
+_BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    return arr.view(np.uint16) if arr.dtype == _BF16 else arr
+
+
+def _from_storable(arr: np.ndarray, target_dtype) -> np.ndarray:
+    td = np.dtype(target_dtype)
+    if td == _BF16 and arr.dtype == np.uint16:
+        return arr.view(_BF16)
+    return arr.astype(td)
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, host_id: int = 0,
+         extra: dict | None = None) -> str:
+    """Save this host's (addressable) shards of `tree` at `step`."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(step_dir, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {k: _to_storable(np.asarray(jax.device_get(v)))
+              for k, v in leaves.items()}
+    shard_path = os.path.join(step_dir, f"shard_{host_id:05d}.npz")
+    tmp = shard_path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, shard_path)
+
+    # manifest last (commit point) — only host 0 writes it
+    if host_id == 0:
+        manifest = {
+            "step": step,
+            "keys": sorted(arrays.keys()),
+            "shapes": {k: list(v.shape) for k, v in arrays.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+            "extra": extra or {},
+            "status": "complete",
+        }
+        mtmp = os.path.join(step_dir, "manifest.json.tmp")
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(mtmp, os.path.join(step_dir, "manifest.json"))
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a complete manifest (incomplete saves skipped)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if not name.startswith("step_"):
+            continue
+        if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like_tree, host_id: int = 0):
+    """Restore `like_tree`-structured arrays saved at `step`."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["status"] == "complete"
+    shard = np.load(os.path.join(step_dir, f"shard_{host_id:05d}.npz"))
+    leaves, treedef = _flatten_with_paths(like_tree)
+    restored = {}
+    for k, proto in leaves.items():
+        arr = shard[k]
+        assert list(arr.shape) == list(proto.shape), (k, arr.shape,
+                                                      proto.shape)
+        restored[k] = _from_storable(arr, proto.dtype)
+    flat = [restored[k] for k in leaves.keys()]
+    paths = list(leaves.keys())
+    # rebuild in treedef order
+    ordered = [restored[p] for p in paths]
+    return jax.tree_util.tree_unflatten(
+        treedef, ordered), manifest.get("extra", {})
+
+
+def restore_resharded(ckpt_dir: str, step: int, like_tree,
+                      put_fn=None, host_id: int = 0):
+    """Elastic restore: load full arrays then re-place with `put_fn`
+    (e.g. jax.device_put with the new mesh's shardings)."""
+    tree, extra = restore(ckpt_dir, step, like_tree, host_id)
+    if put_fn is not None:
+        tree = put_fn(tree)
+    return tree, extra
+
+
+def gc_old(ckpt_dir: str, keep: int = 3) -> None:
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(s for s in (
+        int(n.split("_")[1]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

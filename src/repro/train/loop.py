@@ -1,0 +1,135 @@
+"""Training loop: jit'd step with microbatch gradient accumulation,
+checkpoint/auto-resume, straggler watchdog, failure injection.
+
+`make_train_step` builds the pjit-able step used both by the real loop
+and by the multi-pod dry-run (launch/dryrun.py lowers exactly this fn).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..data.pipeline import DataConfig, DataIterator
+from ..models import init as model_init
+from ..models import loss_fn
+from ..optim import linear_warmup_cosine, make_optimizer
+from . import checkpoint as ckpt
+from .fault_tolerance import FailureInjector, StragglerWatchdog
+
+
+def make_train_step(cfg: ModelConfig, rc: RunConfig,
+                    total_steps: int = 10_000) -> Callable:
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    With rc.microbatches > 1 the batch's leading dim is split and
+    gradients accumulate across a lax.scan (memory-bound shapes train with
+    a fraction of the activation footprint).
+    """
+    _, opt_update = make_optimizer(rc.optimizer, rc.weight_decay)
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, rc)
+        return loss, aux, grads
+
+    def step_fn(params, opt_state, batch, step):
+        if rc.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                mb = rc.microbatches
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                loss, aux, grads = grads_of(params, mb_batch)
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0)), micro,
+                unroll=rc.microbatches if rc.scan_unroll > 0 else 1)
+            grads = jax.tree.map(lambda g: g / rc.microbatches, grads)
+            loss = loss / rc.microbatches
+        else:
+            loss, aux, grads = grads_of(params, batch)
+
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        clip = jnp.minimum(1.0, 1.0 / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * clip, grads)
+
+        lr = linear_warmup_cosine(step, rc.learning_rate,
+                                  rc.warmup_steps, total_steps)
+        params, opt_state = opt_update(params, grads, opt_state, lr)
+        return params, opt_state, {"loss": loss, "gnorm": gnorm, "lr": lr}
+
+    return step_fn
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    losses: list
+    resumed_from: int | None
+    straggler_steps: list
+
+
+def train(cfg: ModelConfig, rc: RunConfig, data_cfg: DataConfig,
+          n_steps: int, *, seed: int = 0, ckpt_dir: str | None = None,
+          ckpt_every: int = 0, injector: FailureInjector | None = None,
+          params=None, opt_state=None) -> TrainResult:
+    """Single-host training driver with auto-resume.
+
+    If `ckpt_dir` holds a complete checkpoint, training resumes from it
+    (params, optimizer state, data cursor) — the crash-recovery path used
+    by the fault-tolerance integration test.
+    """
+    opt_init, _ = make_optimizer(rc.optimizer, rc.weight_decay)
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model_init(key, cfg)
+    if opt_state is None:
+        opt_state = opt_init(params)
+
+    start_step = 0
+    resumed_from = None
+    if ckpt_dir is not None:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), extra = ckpt.restore(
+                ckpt_dir, last, (params, opt_state))
+            start_step = last
+            resumed_from = last
+
+    nb = cfg.audio.n_codebooks if cfg.family == "audio" else 0
+    it = DataIterator(data_cfg, start_step=start_step, n_codebooks=nb)
+    step_fn = jax.jit(make_train_step(cfg, rc, total_steps=n_steps))
+    watchdog = StragglerWatchdog()
+
+    losses, stragglers = [], []
+    for step in range(start_step, n_steps):
+        if injector is not None:
+            injector.check(step)
+        batch = next(it)
+        watchdog.step_start()
+        params, opt_state, metrics = step_fn(
+            params, opt_state, batch, jnp.int32(step))
+        jax.block_until_ready(metrics["loss"])
+        if watchdog.step_end():
+            stragglers.append(step)
+        losses.append(float(metrics["loss"]))
+        if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+            ckpt.save(ckpt_dir, step + 1, (params, opt_state),
+                      extra={"data": it.state()})
+            ckpt.gc_old(ckpt_dir)
+    return TrainResult(params, opt_state, losses, resumed_from, stragglers)

@@ -1,0 +1,120 @@
+"""Calibration tests: the cost model must reproduce the paper's reported
+numbers (within tolerance) — these lock the reproduction's fidelity.
+
+Anchors (paper section in brackets):
+  [Fig 10a / 11a] Digital-6T@RF saturating throughput = 455 GFLOPS.
+  [Fig 13a]       Analog-6T@RF saturating throughput ~= 57 GFLOPS.
+  [Fig 11a]       BERT-Large layers > 1.67 TOPS/W at Digital-6T@RF.
+  [Fig 11a]       M=1 GPT-J decode / DLRM ~= 0.03 TOPS/W, ~= 31 GFLOPS.
+  [Fig 12a]       BERT energy-efficiency gain vs baseline ~= 3x.
+  [Fig 10a]       K=256,N=32: max 455 GFLOPS with utilization 2/3.
+  [Fig 13a]       large square GEMMs: A-2 ~= 620 fJ/MAC, A-1 ~= 700 fJ/MAC.
+  [Fig 11b]       Digital-6T@SMEM configB ~= 10x RF throughput, slightly
+                  higher TOPS/W (~ +0.25).
+  [§VI]           headline: up to ~3.4x energy efficiency vs baseline.
+"""
+import pytest
+
+from repro.core import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T, GEMM,
+                        CiMSystemConfig, configb_count, evaluate,
+                        evaluate_baseline, iso_area_primitive_count, RF)
+
+D6_RF = CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF")
+A6_RF = CiMSystemConfig(prim=ANALOG_6T, cim_level="RF")
+A8_RF = CiMSystemConfig(prim=ANALOG_8T, cim_level="RF")
+
+BERT = GEMM(512, 1024, 1024)
+GEMV = GEMM(1, 4096, 4096)
+
+
+def test_iso_area_counts():
+    # paper: 3 Digital-6T primitives fit at RF under iso-area
+    assert iso_area_primitive_count(RF, DIGITAL_6T) == 3
+    # paper configB: 16x the RF count at SMEM
+    assert configb_count(DIGITAL_6T) == 48
+
+
+def test_d6t_throughput_saturation_455():
+    m = evaluate(GEMM(4096, 4096, 4096), D6_RF)
+    assert m.gflops == pytest.approx(455.0, rel=0.05)
+
+
+def test_a6t_throughput_saturation_57():
+    m = evaluate(GEMM(8192, 8192, 8192), A6_RF)
+    assert m.gflops == pytest.approx(57.0, rel=0.05)
+
+
+def test_low_parallelism_primitives_are_slow():
+    # paper Fig 13: A-2 and D-2 excluded for extremely low performance
+    a2 = evaluate(GEMM(2048, 2048, 2048), A8_RF)
+    d2 = evaluate(GEMM(2048, 2048, 2048),
+                  CiMSystemConfig(prim=DIGITAL_8T, cim_level="RF"))
+    assert a2.gflops < 10.0
+    assert d2.gflops < 5.0
+
+
+def test_bert_tops_per_w_band():
+    m = evaluate(BERT, D6_RF)
+    assert 1.6 < m.tops_per_w < 2.1     # paper: 1.67 .. 1.97
+
+
+def test_gemv_decode_pathology():
+    m = evaluate(GEMV, D6_RF)
+    assert m.tops_per_w == pytest.approx(0.03, abs=0.01)
+    assert m.gflops == pytest.approx(31.0, rel=0.15)
+
+
+def test_gemv_baseline_beats_cim_throughput():
+    cim = evaluate(GEMV, D6_RF)
+    base = evaluate_baseline(GEMV)
+    assert base.gflops > 1.5 * cim.gflops  # paper §VI-C takeaway
+
+
+def test_bert_vs_baseline_energy_ratio_about_3x():
+    cim = evaluate(BERT, D6_RF)
+    base = evaluate_baseline(BERT)
+    assert 2.3 < cim.tops_per_w / base.tops_per_w < 3.8
+
+
+def test_k256_n32_sweet_spot():
+    m = evaluate(GEMM(512, 32, 256), D6_RF)
+    assert m.gflops == pytest.approx(455.0, rel=0.02)
+    assert m.utilization == pytest.approx(2 / 3, abs=0.01)
+
+
+def test_large_square_fj_per_mac():
+    a2 = evaluate(GEMM(8192, 8192, 8192), A8_RF)
+    a1 = evaluate(GEMM(8192, 8192, 8192), A6_RF)
+    # fJ per MAC = 2 * fJ per op
+    assert 2 * a2.fj_per_op == pytest.approx(620.0, rel=0.20)
+    assert 2 * a1.fj_per_op == pytest.approx(700.0, rel=0.20)
+
+
+def test_smem_configb_beats_rf():
+    rf = evaluate(BERT, D6_RF)
+    smem_b = evaluate(BERT, CiMSystemConfig(
+        prim=DIGITAL_6T, cim_level="SMEM", n_prims=configb_count(DIGITAL_6T)))
+    assert smem_b.gflops > 5 * rf.gflops        # "approximately tenfold"
+    assert smem_b.tops_per_w > rf.tops_per_w    # "slightly higher"
+    assert smem_b.tops_per_w - rf.tops_per_w < 0.8
+
+
+def test_energy_plateau_with_m():
+    # paper Fig 10a: TOPS/W rises with M to a sweet point, then the
+    # M=256 -> 512 drop at N=K=512 (1.97 -> 1.75 in the paper)
+    t256 = evaluate(GEMM(256, 512, 512), D6_RF).tops_per_w
+    t512 = evaluate(GEMM(512, 512, 512), D6_RF).tops_per_w
+    t32 = evaluate(GEMM(32, 512, 512), D6_RF).tops_per_w
+    assert t32 < t256
+    assert t512 < t256
+
+
+def test_headline_up_to_energy_gain():
+    # abstract: up to 3.4x energy efficiency vs baseline — look for a shape
+    # that achieves >= 3x among the calibration set
+    best = 0.0
+    for g in (BERT, GEMM(1024, 2048, 1024), GEMM(2048, 2048, 2048)):
+        for cfg in (D6_RF, A6_RF, A8_RF):
+            r = evaluate(g, cfg).tops_per_w / evaluate_baseline(g).tops_per_w
+            best = max(best, r)
+    assert best > 3.0

@@ -1,0 +1,117 @@
+"""Per-kernel shape/dtype sweeps, interpret=True vs the jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.tpu_adapter import choose_blocks
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _assert_close(got, want, tol=2e-3):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --- int8 weight-stationary GEMM ------------------------------------------
+
+@pytest.mark.parametrize("shape", [(32, 64, 128), (64, 128, 64),
+                                   (128, 256, 256), (8, 128, 512)])
+@pytest.mark.parametrize("dataflow", ["os", "ws"])
+@pytest.mark.parametrize("xdtype", [jnp.float32, jnp.bfloat16])
+def test_int8_gemm_sweep(shape, dataflow, xdtype):
+    M, N, K = shape
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    x = jax.random.normal(k1, (M, K), xdtype)
+    w_q = jax.random.randint(k2, (K, N), -127, 127, jnp.int8)
+    ws = jax.random.uniform(k3, (N,), jnp.float32, 0.01, 0.1)
+    got = ops.int8_matmul(x, w_q, ws, dataflow=dataflow, block_m=8,
+                          block_n=64, block_k=64, interpret=True)
+    want = ref.int8_gemm_ref(x, w_q, ws)
+    tol = 2e-2 if xdtype == jnp.bfloat16 else 2e-3
+    _assert_close(got, want, tol)
+
+
+def test_int8_gemm_adapter_blocks():
+    M, N, K = 256, 512, 1024
+    bm, bn, bk = choose_blocks(M, N, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    # weight tile must fit half the VMEM budget
+    assert bk * bn <= 4 * 1024 * 1024
+    x = jax.random.normal(KEY, (M, K), jnp.float32)
+    w_q = jax.random.randint(KEY, (K, N), -127, 127, jnp.int8)
+    ws = jnp.full((N,), 0.05, jnp.float32)
+    got = ops.int8_matmul(x, w_q, ws, interpret=True)
+    _assert_close(got, ref.int8_gemm_ref(x, w_q, ws))
+
+
+# --- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize("s,h,kv,d", [(128, 4, 4, 64), (256, 4, 2, 32),
+                                      (256, 8, 1, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(s, h, kv, d, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (2, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (2, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, block_q=64, block_kv=64,
+                              interpret=True)
+    ke = jnp.repeat(k, h // kv, 2)
+    ve = jnp.repeat(v, h // kv, 2)
+    want = ref.flash_attention_ref(q, ke, ve)
+    _assert_close(got, want, 3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 4, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 4, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, window=64, block_q=64,
+                              block_kv=64, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, window=64)
+    _assert_close(got, want)
+
+
+def test_flash_matches_model_flash_jnp():
+    # the model's chunked-jnp attention and the Pallas kernel must agree
+    from repro.models.attention import flash_jnp
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    a = ops.flash_attention(q, k, v, block_q=64, block_kv=64,
+                            interpret=True)
+    b = flash_jnp(q, k, v, chunk=64)
+    _assert_close(a, b)
+
+
+# --- decode attention -----------------------------------------------------------
+
+@pytest.mark.parametrize("S,length", [(256, 256), (512, 300), (1024, 7)])
+def test_decode_attention_sweep(S, length):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 8, 64), jnp.float32)
+    kc = jax.random.normal(ks[1], (2, S, 2, 64), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, S, 2, 64), jnp.float32)
+    got = ops.decode_attention(q, kc, vc, jnp.int32(length),
+                               block_kv=128, interpret=True)
+    want = ref.decode_attention_ref(q[:, 0], jnp.repeat(kc, 4, 2),
+                                    jnp.repeat(vc, 4, 2), length)
+    _assert_close(got[:, 0], want)
+
+
+def test_decode_matches_model_decode_attend():
+    from repro.models.attention import decode_attend
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 1, 4, 32), jnp.float32)
+    kc = jax.random.normal(ks[1], (2, 256, 4, 32), jnp.float32)
+    vc = jax.random.normal(ks[2], (2, 256, 4, 32), jnp.float32)
+    a = ops.decode_attention(q, kc, vc, jnp.int32(100), block_kv=64,
+                             interpret=True)
+    b = decode_attend(q, kc, vc, jnp.full((2,), 100, jnp.int32))
+    _assert_close(a, b)
