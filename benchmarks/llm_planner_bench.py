@@ -7,12 +7,17 @@ CiM-offload fraction and projected energy gain — train/prefill shapes land
 in the paper's "CiM wins" regime, decode shapes in the "don't CiM" regime
 (Table V), which is exactly what gates the INT8 weight-stationary kernel
 path in repro.quant.planned_linear.
+
+All cells route through the batched sweep engine (plan_workload's default
+vectorized backend): one fused device evaluation per cell instead of a
+scalar cost-model call per (GEMM x config), with results LRU-cached
+across cells.
 """
 from __future__ import annotations
 
 from repro.configs import ARCHS, SHAPES
 from repro.core.llm_workloads import gemms_of_model
-from repro.core.planner import decide, standard_configs
+from repro.core.planner import plan_workload, summarize
 from repro.core import DIGITAL_6T, ANALOG_8T, CiMSystemConfig, configb_count
 
 
@@ -42,19 +47,13 @@ def planner_decisions(max_gemms_per_cell: int = 12):
             gemms = _dedupe(gemms_of_model(mc, shape))
             gemms = sorted(gemms, key=lambda g: -g.ops * g.count
                            )[:max_gemms_per_cell]
-            n_cim = 0
-            e_base = e_best = 0.0
-            for g in gemms:
-                d = decide(g, cfgs)
-                n_cim += d.use_cim
-                e_base += d.baseline.energy_pj * g.count
-                e_best += min(d.baseline.energy_pj,
-                              min(m.energy_pj for m in
-                                  d.options.values())) * g.count
+            decisions = plan_workload(gemms, cfgs, backend="vectorized")
+            summary = summarize(decisions)
             rows.append({
-                "arch": arch, "shape": sname, "n_gemms": len(gemms),
-                "cim_fraction": n_cim / max(1, len(gemms)),
-                "energy_gain_x": e_base / max(e_best, 1e-9),
+                "arch": arch, "shape": sname,
+                "n_gemms": summary["n_gemms"],
+                "cim_fraction": summary["cim_fraction"],
+                "energy_gain_x": summary["energy_gain_x"],
             })
     train_frac = [r["cim_fraction"] for r in rows
                   if r["shape"] == "train_4k"]

@@ -3,6 +3,12 @@
 Each function returns (rows, derived) where rows is a list of dicts
 (written as CSV by run.py) and derived is a {metric: value} summary used
 for the EXPERIMENTS.md reproduction checks.
+
+The big sweeps (fig9/10/11-12/13) evaluate through the batched sweep
+engine (repro.core.sweep: sweep_evaluate / sweep_evaluate_baseline — one
+fused device call per batch of uncached points, LRU-cached across
+figures); fig7 deliberately stays on the scalar path because its derived
+metric *is* the scalar mapper's runtime vs the heuristic search.
 """
 from __future__ import annotations
 
@@ -11,8 +17,9 @@ import time
 
 from repro.core import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T, GEMM,
                         CiMSystemConfig, REAL_WORKLOADS, configb_count,
-                        evaluate, evaluate_baseline, random_search,
-                        square_sweep, synthetic_dataset)
+                        evaluate, random_search, square_sweep,
+                        sweep_evaluate, sweep_evaluate_baseline,
+                        synthetic_dataset)
 from repro.core.gemm import geomean
 
 PRIMS = {"Analog-6T": ANALOG_6T, "Analog-8T": ANALOG_8T,
@@ -74,7 +81,7 @@ def fig9_primitive_scatter(n: int = 120, seed: int = 1):
     for pname, prim in PRIMS.items():
         cfg = CiMSystemConfig(prim=prim, cim_level="RF")
         for g in shapes:
-            m = evaluate(g, cfg)
+            m = sweep_evaluate(g, cfg)
             rows.append({"primitive": pname, "M": g.M, "N": g.N, "K": g.K,
                          "tops_per_w": m.tops_per_w, "gflops": m.gflops,
                          "utilization": m.utilization})
@@ -91,19 +98,19 @@ def fig10_dimension_sweeps():
     sizes = [16, 32, 64, 128, 256, 512, 1024, 2048]
     for X in sizes:                      # (a) weight matrix N=K=X, vary M
         for M in sizes:
-            m = evaluate(GEMM(M, X, X), D6_RF)
+            m = sweep_evaluate(GEMM(M, X, X), D6_RF)
             rows.append({"sweep": "weight", "X": X, "var": M,
                          "tops_per_w": m.tops_per_w, "gflops": m.gflops,
                          "utilization": m.utilization})
     for X in sizes:                      # (b) input matrix M=K=X, vary N
         for N in sizes:
-            m = evaluate(GEMM(X, N, X), D6_RF)
+            m = sweep_evaluate(GEMM(X, N, X), D6_RF)
             rows.append({"sweep": "input", "X": X, "var": N,
                          "tops_per_w": m.tops_per_w, "gflops": m.gflops,
                          "utilization": m.utilization})
     for X in sizes:                      # (c) output matrix M=N=X, vary K
         for K in sizes:
-            m = evaluate(GEMM(X, X, K), D6_RF)
+            m = sweep_evaluate(GEMM(X, X, K), D6_RF)
             rows.append({"sweep": "output", "X": X, "var": K,
                          "tops_per_w": m.tops_per_w, "gflops": m.gflops,
                          "utilization": m.utilization})
@@ -131,12 +138,12 @@ def fig11_12_memory_levels():
     }
     for wl, gemms in REAL_WORKLOADS.items():
         for g in gemms:
-            base = evaluate_baseline(g)
+            base = sweep_evaluate_baseline(g)
             row = {"workload": wl, "M": g.M, "N": g.N, "K": g.K,
                    "baseline_tops_w": base.tops_per_w,
                    "baseline_gflops": base.gflops}
             for name, cfg in cfgs.items():
-                m = evaluate(g, cfg)
+                m = sweep_evaluate(g, cfg)
                 row[f"{name}_tops_w"] = m.tops_per_w
                 row[f"{name}_gflops"] = m.gflops
                 row[f"{name}_util"] = m.utilization
@@ -161,7 +168,7 @@ def fig13_square_gemms():
     """Appendix Fig. 13: square GEMMs, all primitives + tensor core."""
     rows = []
     for g in square_sweep(64, 8192):
-        base = evaluate_baseline(g)
+        base = sweep_evaluate_baseline(g)
         row = {"X": g.M, "Tcore_fj_mac": 2e3 * base.energy_pj / g.ops,
                "Tcore_gflops": base.gflops}
         for pname, prim in PRIMS.items():
@@ -169,7 +176,7 @@ def fig13_square_gemms():
                                ("SMEM", configb_count(prim))):
                 cfg = CiMSystemConfig(prim=prim, cim_level=level,
                                       n_prims=np_)
-                m = evaluate(g, cfg)
+                m = sweep_evaluate(g, cfg)
                 row[f"{pname}@{level}_fj_mac"] = 2 * m.fj_per_op
                 row[f"{pname}@{level}_gflops"] = m.gflops
         rows.append(row)

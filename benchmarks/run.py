@@ -12,6 +12,7 @@ import time
 
 from . import paper_benches as P
 from . import llm_planner_bench as L
+from . import sweep_bench as S
 
 BENCHES = [
     ("fig2_gemm_landscape", P.fig2_gemm_landscape),
@@ -22,6 +23,7 @@ BENCHES = [
     ("fig13_square_gemms", P.fig13_square_gemms),
     ("table6_workload_characteristics", P.table6_workload_characteristics),
     ("llm_planner_decisions", L.planner_decisions),
+    ("planner_sweep_speed", S.planner_sweep_speed),
 ]
 
 

@@ -1,0 +1,90 @@
+"""Planner sweep-engine benchmark: batched vs scalar full-workload planning.
+
+Times `plan_workload` over the FULL llm_workloads GEMM set (every assigned
+arch x train_4k + decode_32k) through both backends and checks verdict
+parity.  Three numbers matter:
+
+  * scalar_s      — the original per-call Python path,
+  * batched_s     — vectorized backend, warm jit, cold result cache
+                    (steady-state planning of a never-seen workload),
+  * cached_s      — vectorized backend, warm LRU cache (the serving
+                    engine's repeat-query case).
+
+Writes BENCH_planner.json (repo root by default; $BENCH_PLANNER_OUT
+overrides) so CI tracks the trajectory PR over PR.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.sweep_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.llm_workloads import gemms_of_model
+from repro.core.planner import plan_workload
+from repro.core.sweep import cache_clear, cache_info
+
+
+def full_llm_gemm_set():
+    gemms = []
+    for mc in ARCHS.values():
+        for sname in ("train_4k", "decode_32k"):
+            gemms += gemms_of_model(mc, SHAPES[sname])
+    return gemms
+
+
+def planner_sweep_speed(write_json: bool = True):
+    gemms = full_llm_gemm_set()
+
+    # start from a cold cache even when earlier benches warmed it:
+    # otherwise the warm-up batch below shrinks to the uncached remainder
+    # and the timed run pays the full-workload jit compile instead.
+    cache_clear()
+    t0 = time.perf_counter()
+    plan_workload(gemms, backend="vectorized")
+    cold_s = time.perf_counter() - t0          # includes jit compilation
+
+    cache_clear()
+    t0 = time.perf_counter()
+    batched = plan_workload(gemms, backend="vectorized")
+    batched_s = time.perf_counter() - t0       # warm jit, cold cache
+
+    t0 = time.perf_counter()
+    plan_workload(gemms, backend="vectorized")
+    cached_s = time.perf_counter() - t0        # warm LRU cache
+
+    t0 = time.perf_counter()
+    scalar = plan_workload(gemms, backend="scalar")
+    scalar_s = time.perf_counter() - t0
+
+    mismatches = sum(
+        a.use_cim != b.use_cim or a.best_energy != b.best_energy
+        for a, b in zip(batched, scalar))
+
+    derived = {
+        "n_gemms": len(gemms),
+        "scalar_s": round(scalar_s, 3),
+        "batched_cold_jit_s": round(cold_s, 3),
+        "batched_s": round(batched_s, 3),
+        "cached_s": round(cached_s, 4),
+        "speedup_x": round(scalar_s / batched_s, 1),
+        "cached_speedup_x": round(scalar_s / cached_s, 1),
+        "verdict_mismatches": mismatches,
+        "cache": cache_info(),
+    }
+    rows = [{"backend": "scalar", "seconds": scalar_s},
+            {"backend": "vectorized_cold_jit", "seconds": cold_s},
+            {"backend": "vectorized", "seconds": batched_s},
+            {"backend": "vectorized_cached", "seconds": cached_s}]
+    if write_json:
+        out = os.environ.get("BENCH_PLANNER_OUT", "BENCH_planner.json")
+        with open(out, "w") as f:
+            json.dump(derived, f, indent=1)
+    return rows, derived
+
+
+if __name__ == "__main__":
+    _, derived = planner_sweep_speed()
+    print(json.dumps(derived, indent=1))

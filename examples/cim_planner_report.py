@@ -3,11 +3,18 @@ qwen2-moe (train_4k and decode_32k), run the what/when/where analysis,
 and print the per-GEMM verdicts — the paper's methodology applied to a
 modern MoE LM.
 
+The whole report plans through the batched sweep engine: one
+plan_workload call per shape evaluates every GEMM x config x candidate
+mapping in a single fused device call (repro.core.sweep), instead of a
+scalar cost-model call per option.
+
   PYTHONPATH=src python examples/cim_planner_report.py
 """
 from repro.configs import ARCHS, SHAPES
-from repro.core import CiMSystemConfig, DIGITAL_6T, configb_count, decide
+from repro.core import (CiMSystemConfig, DIGITAL_6T, configb_count,
+                        plan_workload, summarize)
 from repro.core.llm_workloads import gemms_of_model
+from repro.core.sweep import cache_info
 
 cfgs = {
     "Digital-6T@RF": CiMSystemConfig(prim=DIGITAL_6T, cim_level="RF"),
@@ -25,9 +32,14 @@ for shape_name in ("train_4k", "decode_32k"):
     for g in gemms:
         uniq.setdefault((g.M, g.N, g.K), g)
     top = sorted(uniq.values(), key=lambda g: -g.ops * g.count)[:8]
+    decisions = plan_workload(top, cfgs, backend="vectorized")
     print(f"\n=== {arch.name} x {shape_name} ({len(gemms)} GEMM kinds) ===")
     print(f"{'GEMM':38s} {'reuse':>8s} {'verdict':>20s}")
-    for g in top:
-        d = decide(g, cfgs)
+    for d in decisions:
+        g = d.gemm
         print(f"{str(g)[:38]:38s} {g.algorithmic_reuse:8.1f} "
               f"{d.what:>20s}")
+    s = summarize(decisions)
+    print(f"-- cim_fraction={s['cim_fraction']:.2f} "
+          f"energy_gain={s['energy_gain_x']:.2f}x")
+print(f"\nsweep cache: {cache_info()}")

@@ -13,7 +13,10 @@ from .heuristic import random_search
 from .mapping import CiMMapping, priority_map
 from .memory import (DRAM, LEVELS, RF, SMEM, CiMSystemConfig, configb_count,
                      iso_area_primitive_count)
-from .planner import Decision, decide, plan_workload, standard_configs, summarize
+from .planner import (Decision, decide, make_decision, plan_workload,
+                      standard_configs, summarize)
+from .sweep import (SweepEngine, decide_batched, plan_workload_batched,
+                    sweep_evaluate, sweep_evaluate_baseline)
 from .primitives import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T,
                          PRIMITIVES, TENSOR_CORE, CiMPrimitive,
                          TensorCoreSpec, mac_energy_pj_from_tops_w,
@@ -34,5 +37,7 @@ __all__ = [
     "attention_gemms", "conv2d_gemm", "fc_gemm",
     "BERT_LARGE", "GPT_J", "DLRM", "RESNET50", "REAL_WORKLOADS",
     "synthetic_dataset", "square_sweep",
-    "evaluate_batch", "exhaustive_best",
+    "evaluate_batch", "exhaustive_best", "make_decision",
+    "SweepEngine", "decide_batched", "plan_workload_batched",
+    "sweep_evaluate", "sweep_evaluate_baseline",
 ]

@@ -129,12 +129,14 @@ def _pow2s(limit: int, lo: int = 1):
         v *= 2
 
 
-def evaluate_baseline(gemm: GEMM, spec: TensorCoreSpec = TENSOR_CORE
-                      ) -> Metrics:
-    """Search tile sizes + loop orders for the tensor-core baseline and
-    return the best (min cycles, then min energy) metrics."""
+def tile_candidates(gemm: GEMM):
+    """Yield every (mt, nt, kt, ms, ns, ks) tile combo the baseline search
+    considers: the power-of-two RF tile grid, the largest K depth fitting
+    RF, and greedily-grown SMEM super-tile factors (M first, then N, then
+    K).  Shared by the scalar search below and the batched scorer in
+    vectorized.evaluate_baseline_flat (same order, so tie-breaks agree).
+    """
     g = gemm
-    best: Metrics | None = None
     for mt in _pow2s(min(2 * SPATIAL_M * 4, max(SPATIAL_M, g.M)), 8):
         for nt in _pow2s(min(2 * SPATIAL_N * 4, max(SPATIAL_N, g.N)), 8):
             # largest power-of-two K depth that fits RF with these tiles
@@ -147,6 +149,7 @@ def evaluate_baseline(gemm: GEMM, spec: TensorCoreSpec = TENSOR_CORE
             kt = min(kt, max(1, g.K))
             # SMEM super-tile: grow factors greedily, M first then N
             ms = ns = ks = 1
+
             def smem_ok(ms, ns, ks):
                 return (min(g.M, mt * ms) * min(g.K, kt * ks)
                         + min(g.K, kt * ks) * min(g.N, nt * ns)
@@ -158,23 +161,37 @@ def evaluate_baseline(gemm: GEMM, spec: TensorCoreSpec = TENSOR_CORE
                 ns *= 2
             while kt * ks < g.K and smem_ok(ms, ns, ks * 2):
                 ks *= 2
-            rf_loops = (("M", ms), ("K", ks), ("N", ns))
-            dram = (("M", ceil_div(g.M, mt * ms)),
-                    ("K", ceil_div(g.K, kt * ks)),
-                    ("N", ceil_div(g.N, nt * ns)))
-            for rf_perm in itertools.permutations(rf_loops):
-                for dram_perm in itertools.permutations(dram):
-                    mp = BaselineMapping(g, mt, nt, kt, ms, ns, ks,
-                                         rf_loops=tuple(rf_perm),
-                                         smem_loops=tuple(rf_perm),
-                                         dram_loops=tuple(dram_perm))
-                    try:
-                        mp.validate()
-                    except AssertionError:
-                        continue
-                    m = _evaluate_order(mp, spec)
-                    key = (m.time_ns, m.energy_pj)
-                    if best is None or key < (best.time_ns, best.energy_pj):
-                        best = m
+            yield (mt, nt, kt, ms, ns, ks)
+
+
+def evaluate_baseline(gemm: GEMM, spec: TensorCoreSpec = TENSOR_CORE
+                      ) -> Metrics:
+    """Search tile sizes + loop orders for the tensor-core baseline and
+    return the best (min cycles, then min energy) metrics.
+
+    This is the scalar reference; repro.core.sweep scores the identical
+    grid through vectorized.evaluate_baseline_flat in one fused kernel.
+    """
+    g = gemm
+    best: Metrics | None = None
+    for mt, nt, kt, ms, ns, ks in tile_candidates(g):
+        rf_loops = (("M", ms), ("K", ks), ("N", ns))
+        dram = (("M", ceil_div(g.M, mt * ms)),
+                ("K", ceil_div(g.K, kt * ks)),
+                ("N", ceil_div(g.N, nt * ns)))
+        for rf_perm in itertools.permutations(rf_loops):
+            for dram_perm in itertools.permutations(dram):
+                mp = BaselineMapping(g, mt, nt, kt, ms, ns, ks,
+                                     rf_loops=tuple(rf_perm),
+                                     smem_loops=tuple(rf_perm),
+                                     dram_loops=tuple(dram_perm))
+                try:
+                    mp.validate()
+                except AssertionError:
+                    continue
+                m = _evaluate_order(mp, spec)
+                key = (m.time_ns, m.energy_pj)
+                if best is None or key < (best.time_ns, best.energy_pj):
+                    best = m
     assert best is not None, f"no valid baseline mapping for {gemm}"
     return best

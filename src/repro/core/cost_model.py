@@ -70,6 +70,29 @@ class Metrics:
         }
 
 
+def metrics_from_row(ops: float, row: dict, mapping=None) -> Metrics:
+    """Build a Metrics from one row of a batched evaluation result
+    (vectorized.evaluate_flat / evaluate_baseline_flat outputs).
+
+    The batched path computes aggregate energy only, so the per-level
+    breakdown dict is empty; everything the planner consumes (energy,
+    time, throughput, utilization, traffic) is populated.
+    """
+    return Metrics(
+        ops=float(ops),
+        energy_pj=float(row["energy_pj"]),
+        time_ns=float(row["time_ns"]),
+        compute_ns=float(row.get("compute_ns", 0.0)),
+        dram_ns=float(row.get("dram_ns", 0.0)),
+        smem_ns=float(row.get("smem_ns", 0.0)),
+        utilization=float(row.get("utilization", 0.0)),
+        dram_bytes=float(row.get("dram_bytes", 0.0)),
+        smem_bytes=float(row.get("smem_bytes", 0.0)),
+        energy_breakdown_pj={},
+        mapping=mapping,
+    )
+
+
 def _dram_order_candidates(mapping: CiMMapping, order_mode: str):
     loops = mapping.dram_loops
     if order_mode == "greedy":

@@ -9,6 +9,18 @@ kernel selection: GEMMs whose best option is CiM-like (weight-stationary,
 large M, K within reduction reach) run the weight-stationary INT8 Pallas
 path; memory-bound M=1 decode GEMMs stay on the standard path (the paper's
 "when NOT to CiM" takeaway).
+
+Backends (`decide` / `plan_workload` accept backend="vectorized"|"scalar"):
+  * "vectorized" (default): the batched sweep engine (repro.core.sweep) —
+    all GEMMs x configs x candidate mappings scored in one fused jax.jit
+    call through vectorized.evaluate_flat, with an LRU result cache keyed
+    by (GEMM, config, order_mode).  Only order_mode="exact" runs batched;
+    "greedy" transparently falls back to the scalar path.
+  * "scalar": the original per-call Python cost model — kept as the
+    reference for parity testing (tests/test_sweep.py) and for
+    order_mode="greedy".
+Both backends apply the identical eligibility and "when" rules
+(`make_decision`), so verdicts can only differ by float tolerance.
 """
 from __future__ import annotations
 
@@ -60,20 +72,24 @@ class Decision:
         name = self.best_energy
         return name.split("@")[-1] if "@" in name else "PE"
 
+    @property
+    def chosen(self) -> Metrics:
+        """Metrics of the deployable (eligible min-energy) option."""
+        if self.best_energy == "baseline":
+            return self.baseline
+        return self.options[self.best_energy]
 
-def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
-           order_mode: str = "exact",
-           throughput_floor: float = 0.5) -> Decision:
-    """What/when/where for one GEMM.
 
-    The deployable choice ("what") is the most energy-efficient option
-    among those keeping >= `throughput_floor` of the baseline's
-    throughput (a CiM deployment that collapses performance is not a
-    win — paper §VI-A's latency/parallelism trade-off)."""
-    configs = configs or standard_configs()
-    base = evaluate_baseline(gemm)
-    options = {name: evaluate(gemm, cfg, order_mode)
-               for name, cfg in configs.items()}
+def make_decision(gemm: GEMM, base: Metrics, options: dict,
+                  throughput_floor: float = 0.5) -> Decision:
+    """Apply the what/when rules to already-evaluated options.
+
+    Shared by the scalar path below and the batched sweep engine
+    (repro.core.sweep), so the two backends cannot drift.  The deployable
+    choice ("what") is the most energy-efficient option among those
+    keeping >= `throughput_floor` of the baseline's throughput (a CiM
+    deployment that collapses performance is not a win — paper §VI-A's
+    latency/parallelism trade-off)."""
     all_opts = dict(options)
     all_opts["baseline"] = base
     eligible = {n: m for n, m in all_opts.items()
@@ -89,14 +105,55 @@ def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
                     use_cim=use_cim)
 
 
+def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
+           order_mode: str = "exact",
+           throughput_floor: float = 0.5,
+           backend: str = "vectorized") -> Decision:
+    """What/when/where for one GEMM.
+
+    backend="vectorized" routes through the batched sweep engine (cached,
+    one fused device call); backend="scalar" is the Python reference.
+    order_mode="greedy" always runs scalar (see module docstring)."""
+    if backend not in ("vectorized", "scalar"):
+        raise ValueError(f"unknown planner backend {backend!r}; "
+                         "expected 'vectorized' or 'scalar'")
+    configs = configs or standard_configs()
+    if backend == "vectorized" and order_mode == "exact":
+        from .sweep import decide_batched
+        return decide_batched(gemm, configs, order_mode, throughput_floor)
+    base = evaluate_baseline(gemm)
+    options = {name: evaluate(gemm, cfg, order_mode)
+               for name, cfg in configs.items()}
+    return make_decision(gemm, base, options, throughput_floor)
+
+
 def plan_workload(gemms: Iterable[GEMM],
                   configs: dict[str, CiMSystemConfig] | None = None,
-                  order_mode: str = "exact") -> list[Decision]:
-    return [decide(g, configs, order_mode) for g in gemms]
+                  order_mode: str = "exact",
+                  backend: str = "vectorized") -> list[Decision]:
+    """Per-GEMM decisions for a whole workload.
+
+    The default vectorized backend flattens the entire workload into one
+    batched evaluation (plus one for the baselines) instead of looping
+    decide() — 10x+ faster on full llm_workloads sweeps (see
+    benchmarks/sweep_bench.py)."""
+    if backend not in ("vectorized", "scalar"):
+        raise ValueError(f"unknown planner backend {backend!r}; "
+                         "expected 'vectorized' or 'scalar'")
+    if backend == "vectorized" and order_mode == "exact":
+        from .sweep import plan_workload_batched
+        return plan_workload_batched(gemms, configs, order_mode)
+    return [decide(g, configs, order_mode, backend=backend)
+            for g in gemms]
 
 
 def summarize(decisions: Sequence[Decision]) -> dict:
-    """Aggregate what/when/where statistics over a workload."""
+    """Aggregate what/when/where statistics over a workload.
+
+    energy_gain_x compares the baseline against each GEMM's *deployable*
+    option — d.options[d.best_energy], the eligible winner decide() would
+    actually pick — not the unconstrained min-energy option, which could
+    be a config the throughput floor rules out."""
     n = len(decisions)
     cim_frac = sum(d.use_cim for d in decisions) / max(1, n)
     wheres: dict[str, int] = {}
@@ -104,11 +161,9 @@ def summarize(decisions: Sequence[Decision]) -> dict:
     for d in decisions:
         wheres[d.where] = wheres.get(d.where, 0) + 1
         whats[d.what] = whats.get(d.what, 0) + 1
-    # energy-weighted speedups vs baseline
+    # energy-weighted gain vs baseline, over the eligible winners
     e_base = sum(d.baseline.energy_pj * d.gemm.count for d in decisions)
-    e_best = sum(min(d.baseline.energy_pj,
-                     min(m.energy_pj for m in d.options.values()))
-                 * d.gemm.count for d in decisions)
+    e_best = sum(d.chosen.energy_pj * d.gemm.count for d in decisions)
     return {"n_gemms": n, "cim_fraction": cim_frac, "where": wheres,
             "what": whats,
             "energy_gain_x": e_base / e_best if e_best else 0.0}

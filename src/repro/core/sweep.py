@@ -1,0 +1,273 @@
+"""Batched What/When/Where sweep engine (the planner's fast path).
+
+`planner.decide` answers the paper's three questions one scalar cost-model
+call at a time: every GEMM x 12 system configs x ~3 candidate mappings x 6
+loop orders, plus a ~1300-point tensor-core baseline search, all in
+Python.  This module flattens the whole workload — every GEMM, every
+config, every candidate mapping — into two device batches (CiM rows and
+baseline tile rows) and scores each under ONE `jax.jit` call through
+`vectorized.evaluate_flat` / `evaluate_baseline_flat`.  CiMLoop-style
+batched analytical evaluation is what makes full design-space sweeps
+tractable; here it makes full-workload planning 10x+ faster than the
+scalar path (benchmarks/sweep_bench.py tracks the ratio).
+
+Results are memoized in an LRU cache keyed by (GEMM shape, system config,
+order_mode), so repeated decode-shape queries — the serving engine asks
+about the same handful of GEMMs for every session — are answered without
+touching the device at all.  `cache_info()` exposes hit/miss telemetry.
+
+Only order_mode="exact" is supported (the batched kernels score all 6
+DRAM orders and keep the min — exactly the scalar "exact" mode);
+`planner.decide(backend="vectorized")` transparently falls back to the
+scalar path for "greedy".
+
+Verdict parity with the scalar path is enforced by tests/test_sweep.py.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable, Sequence
+
+import jax
+import numpy as np
+
+from .baseline import evaluate_baseline
+from .cost_model import Metrics, evaluate, metrics_from_row
+from .gemm import GEMM
+from .mapping import candidate_mappings
+from .memory import CiMSystemConfig
+from .vectorized import (BASE_TILE_FIELDS, MAP_FIELDS, config_row,
+                         enumerate_baseline_space, evaluate_baseline_flat,
+                         evaluate_flat)
+
+_EVAL_CIM = jax.jit(evaluate_flat)
+_EVAL_BASE = jax.jit(evaluate_baseline_flat)
+
+_OUT_KEYS = ("energy_pj", "time_ns", "compute_ns", "dram_ns", "smem_ns",
+             "utilization", "dram_bytes", "smem_bytes", "valid")
+
+
+def _gemm_key(g: GEMM):
+    return (g.M, g.N, g.K, g.bits)
+
+
+def _cfg_key(cfg: CiMSystemConfig):
+    p = cfg.prim
+    return (p.name, p.Rp, p.Cp, p.Rh, p.Ch, p.capacity_bytes, p.latency_ns,
+            p.mac_energy_pj, cfg.cim_level, cfg.resolved_n_prims(),
+            cfg.serialize_primitives, cfg.kn_balance_threshold)
+
+
+def _pad_len(n: int) -> int:
+    """Next power of two — bounds the number of jit retraces to O(log B)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _run_padded(fn, batch: dict, n: int) -> dict:
+    """jit-run a flat batch padded (by repeating row 0) to a pow2 length."""
+    m = _pad_len(max(1, n))
+    if m != n:
+        batch = {k: np.concatenate(
+            [v, np.broadcast_to(v[:1], (m - n,) + v.shape[1:])])
+            for k, v in batch.items()}
+    out = fn({k: np.asarray(v, np.float32) for k, v in batch.items()})
+    return {k: np.asarray(out[k])[:n] for k in _OUT_KEYS}
+
+
+class SweepEngine:
+    """Whole-workload batched planner evaluation with an LRU result cache.
+
+    cim_metrics / baseline_metrics return the same Metrics the scalar
+    cost model produces (within float32 tolerance), but evaluate every
+    uncached (GEMM, config) pair of a query in one fused device call.
+    """
+
+    def __init__(self, cache_size: int = 16384):
+        self.cache_size = cache_size
+        self._cache: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    # --- cache plumbing ---------------------------------------------------
+    def _get(self, key):
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return self._cache[key]
+        self.misses += 1
+        return None
+
+    def _put(self, key, value):
+        self._cache[key] = value
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def cache_info(self) -> dict:
+        return {"size": len(self._cache), "max_size": self.cache_size,
+                "hits": self.hits, "misses": self.misses}
+
+    def cache_clear(self) -> None:
+        self._cache.clear()
+        self.hits = self.misses = 0
+
+    # --- CiM options ------------------------------------------------------
+    def cim_metrics(self, pairs: Sequence[tuple[GEMM, CiMSystemConfig]],
+                    order_mode: str = "exact") -> list[Metrics]:
+        """Metrics for each (GEMM, config) pair: the min-energy candidate
+        mapping, scored on-device (== cost_model.evaluate)."""
+        if order_mode != "exact":
+            raise ValueError(
+                "the batched sweep scores all DRAM orders in-kernel; only "
+                "order_mode='exact' is supported (use backend='scalar' "
+                "for greedy-order parity runs)")
+        keys = [("cim", _gemm_key(g), _cfg_key(c), order_mode)
+                for g, c in pairs]
+        results: dict = {}
+        todo: OrderedDict = OrderedDict()      # key -> (gemm, cfg)
+        for key, (g, c) in zip(keys, pairs):
+            hit = self._get(key)
+            if hit is not None:
+                results[key] = hit
+            else:
+                todo.setdefault(key, (g, c))
+
+        if todo:
+            flat, slices = [], []
+            for key, (g, c) in todo.items():
+                maps = candidate_mappings(g, c, order_mode)
+                crow = config_row(c)
+                start = len(flat)
+                flat.extend(
+                    {"M": g.M, "N": g.N, "K": g.K, **crow,
+                     **{f: getattr(mp, f) for f in MAP_FIELDS}}
+                    for mp in maps)
+                slices.append((key, g, c, maps, start, start + len(maps)))
+            batch = {f: np.asarray([r[f] for r in flat], np.float32)
+                     for f in flat[0]}
+            out = _run_padded(_EVAL_CIM, batch, len(flat))
+            for key, g, c, maps, lo, hi in slices:
+                e = out["energy_pj"][lo:hi]
+                ok = out["valid"][lo:hi]
+                if not ok.any():               # should not happen: mappings
+                    met = evaluate(g, c, order_mode)   # are pre-validated
+                else:
+                    i = int(np.argmin(np.where(ok, e, np.inf)))
+                    met = metrics_from_row(
+                        g.ops, {k: out[k][lo + i] for k in _OUT_KEYS},
+                        mapping=maps[i])
+                self._put(key, met)
+                results[key] = met
+        return [results[k] for k in keys]
+
+    # --- tensor-core baseline --------------------------------------------
+    def baseline_metrics(self, gemms: Sequence[GEMM]) -> list[Metrics]:
+        """Baseline Metrics per GEMM: the full tile grid scored on-device,
+        lexicographic (time, energy) winner (== evaluate_baseline)."""
+        keys = [("base", _gemm_key(g)) for g in gemms]
+        results: dict = {}
+        todo: OrderedDict = OrderedDict()
+        for key, g in zip(keys, gemms):
+            hit = self._get(key)
+            if hit is not None:
+                results[key] = hit
+            else:
+                todo.setdefault(key, g)
+
+        if todo:
+            spaces = [(key, g, enumerate_baseline_space(g))
+                      for key, g in todo.items()]
+            names = BASE_TILE_FIELDS + ("M", "N", "K")
+            batch = {f: np.concatenate([np.asarray(s[f]) for _, _, s in
+                                        spaces]) for f in names}
+            n = batch["mt"].shape[0]
+            out = _run_padded(_EVAL_BASE, batch, n)
+            lo = 0
+            for key, g, space in spaces:
+                hi = lo + np.asarray(space["mt"]).shape[0]
+                t = out["time_ns"][lo:hi]
+                e = out["energy_pj"][lo:hi]
+                ok = out["valid"][lo:hi]
+                if not ok.any():
+                    met = evaluate_baseline(g)
+                else:
+                    # lexicographic (time, energy), first index on ties —
+                    # the scalar search's iteration-order tie-break
+                    t = np.where(ok, t, np.inf)
+                    tmin = t.min()
+                    cand = np.where(t == tmin, np.where(ok, e, np.inf),
+                                    np.inf)
+                    i = int(np.argmin(cand))
+                    met = metrics_from_row(
+                        g.ops, {k: out[k][lo + i] for k in _OUT_KEYS})
+                self._put(key, met)
+                results[key] = met
+                lo = hi
+        return [results[k] for k in keys]
+
+
+# Shared default engine: one process-wide cache, so the serving engine,
+# benchmarks, and examples all reuse each other's results.
+_ENGINE = SweepEngine()
+
+
+def default_engine() -> SweepEngine:
+    return _ENGINE
+
+
+def cache_info() -> dict:
+    return _ENGINE.cache_info()
+
+
+def cache_clear() -> None:
+    _ENGINE.cache_clear()
+
+
+def sweep_evaluate(gemm: GEMM, cfg: CiMSystemConfig,
+                   order_mode: str = "exact") -> Metrics:
+    """Cached batched equivalent of cost_model.evaluate."""
+    return _ENGINE.cim_metrics([(gemm, cfg)], order_mode)[0]
+
+
+def sweep_evaluate_baseline(gemm: GEMM) -> Metrics:
+    """Cached batched equivalent of baseline.evaluate_baseline."""
+    return _ENGINE.baseline_metrics([gemm])[0]
+
+
+def plan_workload_batched(gemms: Iterable[GEMM],
+                          configs: dict[str, CiMSystemConfig] | None = None,
+                          order_mode: str = "exact",
+                          throughput_floor: float = 0.5,
+                          engine: SweepEngine | None = None):
+    """Batched planner.plan_workload: one device sweep, scalar verdicts.
+
+    Evaluates all GEMMs x all configs x all candidate mappings in one
+    fused call per kind (CiM / baseline), then applies exactly the same
+    eligibility + "when" rules as planner.decide.
+    """
+    from .planner import make_decision, standard_configs
+    engine = engine or _ENGINE
+    gemms = list(gemms)
+    configs = configs or standard_configs()
+    names = list(configs)
+    bases = engine.baseline_metrics(gemms)
+    pairs = [(g, configs[name]) for g in gemms for name in names]
+    mets = engine.cim_metrics(pairs, order_mode)
+    decisions = []
+    for i, g in enumerate(gemms):
+        opts = {name: mets[i * len(names) + j]
+                for j, name in enumerate(names)}
+        decisions.append(make_decision(g, bases[i], opts, throughput_floor))
+    return decisions
+
+
+def decide_batched(gemm: GEMM,
+                   configs: dict[str, CiMSystemConfig] | None = None,
+                   order_mode: str = "exact",
+                   throughput_floor: float = 0.5,
+                   engine: SweepEngine | None = None):
+    return plan_workload_batched([gemm], configs, order_mode,
+                                 throughput_floor, engine)[0]

@@ -18,6 +18,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def abstract_mesh(shape, axes):
+    """Device-less mesh for sharding-spec legality checks.
+
+    jax <= 0.4.x takes AbstractMesh(((name, size), ...)); newer releases
+    take AbstractMesh(shape, axis_names).  Normalize here so callers (and
+    tests) work on either.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_mesh_from_devices(devices, shape, axes):
     """Mesh over an explicit device subset (elastic re-mesh after node
     loss, or the single-pod 256-of-512 slice in the dry-run)."""

@@ -4,6 +4,14 @@
 the multi-pod dry-run lowers for decode_32k / long_500k shapes.  The
 engine itself adds batched request handling, greedy/temperature sampling,
 and prefill-vs-full-forward consistency (tested).
+
+Kernel gating: `ServeSession.kernel_plan` runs the What/When/Where
+planner (batched sweep backend — repro.core.sweep, one fused device call,
+LRU-cached so every session serving the same model shape reuses the
+verdicts) over this session's decode GEMMs; `use_cim_for(label)` is the
+per-GEMM gate consulted when routing a projection through the
+weight-stationary INT8 path (repro.quant.planned_linear) vs the standard
+XLA matmul — the paper's "when NOT to CiM" answer, enforced at runtime.
 """
 from __future__ import annotations
 
@@ -57,6 +65,30 @@ class ServeSession:
                                 n_image_tokens=self.n_image_tokens)
         self.pos = 0
         self._step = jax.jit(make_serve_step(self.cfg, self.rc))
+        self._kernel_plan = None
+
+    @property
+    def kernel_plan(self) -> dict:
+        """label -> planner Decision for this session's decode GEMMs.
+
+        Computed lazily on first access through the batched sweep planner
+        (plan_workload, backend="vectorized"); the sweep engine's LRU
+        cache makes repeat sessions over the same shapes free."""
+        if self._kernel_plan is None:
+            from ..configs.base import ShapeConfig
+            from ..core.llm_workloads import gemms_of_model
+            from ..core.planner import plan_workload
+            shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
+            gemms = gemms_of_model(self.cfg, shape)
+            decisions = plan_workload(gemms, backend="vectorized")
+            self._kernel_plan = {d.gemm.label: d for d in decisions}
+        return self._kernel_plan
+
+    def use_cim_for(self, label: str) -> bool:
+        """The planner's "when" gate for one GEMM of this session (feeds
+        repro.quant.planned_linear's use_cim_path)."""
+        d = self.kernel_plan.get(label)
+        return bool(d.use_cim) if d is not None else False
 
     def prefill(self, tokens):
         """Feed a prompt token-by-token through the decode path (keeps a

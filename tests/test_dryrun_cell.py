@@ -39,6 +39,25 @@ def test_extrapolation_math():
     assert _unroll_points(3) == [3]
 
 
+def test_normalize_cost_analysis_dict_and_list():
+    from repro.launch.dryrun import _normalize_cost_analysis
+    # older jax: flat dict passes through
+    d = {"flops": 8.0, "bytes accessed": 32.0}
+    assert _normalize_cost_analysis(d) == d
+    # newer jax: single-entry list is taken as-is
+    assert _normalize_cost_analysis([d]) == d
+    # multi-computation list: numeric values sum, others keep first
+    merged = _normalize_cost_analysis(
+        [{"flops": 8.0, "note": "a"}, {"flops": 4.0, "bytes accessed": 16.0}])
+    assert merged["flops"] == 12.0
+    assert merged["bytes accessed"] == 16.0
+    assert merged["note"] == "a"
+    # degenerate shapes
+    assert _normalize_cost_analysis(None) == {}
+    assert _normalize_cost_analysis([]) == {}
+    assert _normalize_cost_analysis([None]) == {}
+
+
 def test_unroll_points_divide():
     from repro.launch.dryrun import _unroll_points
     for L in (9, 20, 24, 28, 32, 40, 48, 64):

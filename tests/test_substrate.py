@@ -209,12 +209,13 @@ def test_failure_injector():
 # --- sharding rules -----------------------------------------------------------------
 
 def test_param_specs_and_legalize():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
+    from jax.sharding import PartitionSpec as P
     from repro.configs import ARCHS, RunConfig
+    from repro.launch.mesh import abstract_mesh
     from repro.launch.specs import param_shapes
     from repro.sharding.rules import legalize, param_specs
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     cfg = ARCHS["qwen2-7b"]
     rc = RunConfig()
     shapes = param_shapes(cfg)
@@ -236,11 +237,11 @@ def test_param_specs_and_legalize():
 
 
 def test_mamba_vocab_not_sharded_16way():
-    from jax.sharding import AbstractMesh, PartitionSpec as P
     from repro.configs import ARCHS, RunConfig
+    from repro.launch.mesh import abstract_mesh
     from repro.launch.specs import param_shapes
     from repro.sharding.rules import legalize, param_specs
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     cfg = ARCHS["mamba2-780m"]           # vocab 50280 % 16 != 0
     shapes = param_shapes(cfg)
     specs = legalize(param_specs(shapes, cfg, RunConfig()), shapes, mesh)

@@ -1,0 +1,187 @@
+"""Batched sweep engine vs the scalar planner: verdict parity, metric
+parity (including the CiM@SMEM and baseline scoring the vectorized model
+gained), LRU-cache behavior, and the summarize() eligibility fix."""
+import numpy as np
+import pytest
+
+from repro.core import (DIGITAL_6T, GEMM, CiMSystemConfig, Decision,
+                        decide, evaluate, evaluate_baseline, make_decision,
+                        plan_workload, standard_configs, summarize)
+from repro.core.cost_model import Metrics, metrics_from_row
+from repro.core.sweep import SweepEngine, decide_batched
+
+# paper-flavored shape grid: BERT layer, GPT-J decode GEMV, ResNet stem,
+# batched decode FFN, squares, and awkward non-pow2 dims
+PAPER_GEMMS = [
+    GEMM(512, 1024, 1024),      # BERT-Large projection
+    GEMM(1, 4096, 4096),        # GPT-J M=1 decode (the "when NOT to CiM")
+    GEMM(12544, 64, 147),       # ResNet50 stem conv-as-GEMM
+    GEMM(128, 5632, 2048),      # batched decode FFN
+    GEMM(4096, 1408, 2048),     # train-shape expert GEMM
+    GEMM(256, 256, 256),
+    GEMM(17, 100, 300),         # non-pow2 everything
+    GEMM(1, 32, 64),            # tiny GEMV
+]
+
+CONFIGS = standard_configs()
+
+
+def _tie_ok(name_a, name_b, opts_a, base_a, tol=0.02):
+    """Verdicts may differ only on float32 near-ties: the two chosen
+    options' efficiencies must then be within `tol`."""
+    def topsw(name):
+        return (base_a.tops_per_w if name == "baseline"
+                else opts_a[name].tops_per_w)
+    ta, tb = topsw(name_a), topsw(name_b)
+    return abs(ta - tb) <= tol * max(ta, tb)
+
+
+@pytest.mark.parametrize("gemm", PAPER_GEMMS,
+                         ids=[f"{g.M}x{g.N}x{g.K}" for g in PAPER_GEMMS])
+def test_verdict_parity_all_standard_configs(gemm):
+    dv = decide(gemm, CONFIGS, backend="vectorized")
+    ds = decide(gemm, CONFIGS, backend="scalar")
+    assert dv.use_cim == ds.use_cim, (gemm, dv.best_energy, ds.best_energy)
+    assert (dv.best_energy == ds.best_energy
+            or _tie_ok(dv.best_energy, ds.best_energy, ds.options,
+                       ds.baseline)), (gemm, dv.best_energy, ds.best_energy)
+
+
+def test_option_metric_parity_all_standard_configs():
+    for gemm in PAPER_GEMMS[:4]:
+        ds = decide(gemm, CONFIGS, backend="scalar")
+        dv = decide(gemm, CONFIGS, backend="vectorized")
+        assert dv.baseline.energy_pj == pytest.approx(
+            ds.baseline.energy_pj, rel=0.02)
+        assert dv.baseline.time_ns == pytest.approx(
+            ds.baseline.time_ns, rel=0.02)
+        for name in CONFIGS:
+            assert dv.options[name].energy_pj == pytest.approx(
+                ds.options[name].energy_pj, rel=0.02), (gemm, name)
+            assert dv.options[name].time_ns == pytest.approx(
+                ds.options[name].time_ns, rel=0.02), (gemm, name)
+
+
+def test_plan_workload_backends_agree():
+    gemms = PAPER_GEMMS
+    dv = plan_workload(gemms, CONFIGS, backend="vectorized")
+    ds = plan_workload(gemms, CONFIGS, backend="scalar")
+    for a, b in zip(dv, ds):
+        assert a.use_cim == b.use_cim
+        assert (a.best_energy == b.best_energy
+                or _tie_ok(a.best_energy, b.best_energy, b.options,
+                           b.baseline))
+
+
+def test_smem_config_batch_matches_scalar():
+    """The vectorized model's new CiM@SMEM scoring (configA/B) matches
+    cost_model.evaluate."""
+    for g in (GEMM(512, 1024, 1024), GEMM(1, 4096, 4096),
+              GEMM(128, 5632, 2048)):
+        for name in ("Digital-6T@SMEM-A", "Digital-6T@SMEM-B",
+                     "Analog-8T@SMEM-B"):
+            cfg = CONFIGS[name]
+            m_s = evaluate(g, cfg)
+            m_v = SweepEngine().cim_metrics([(g, cfg)])[0]
+            assert m_v.energy_pj == pytest.approx(m_s.energy_pj, rel=0.02)
+            assert m_v.time_ns == pytest.approx(m_s.time_ns, rel=0.02)
+
+
+def test_baseline_batch_matches_scalar():
+    """The vectorized model's new tensor-core baseline scoring matches
+    baseline.evaluate_baseline."""
+    eng = SweepEngine()
+    for g in PAPER_GEMMS:
+        m_s = evaluate_baseline(g)
+        m_v = eng.baseline_metrics([g])[0]
+        assert m_v.energy_pj == pytest.approx(m_s.energy_pj, rel=0.02), g
+        assert m_v.time_ns == pytest.approx(m_s.time_ns, rel=0.02), g
+
+
+def test_sweep_cache_hits_and_identity():
+    eng = SweepEngine()
+    g = GEMM(256, 512, 512)
+    cfg = CONFIGS["Digital-6T@RF"]
+    m1 = eng.cim_metrics([(g, cfg)])[0]
+    assert eng.cache_info()["misses"] == 1
+    m2 = eng.cim_metrics([(g, cfg)])[0]
+    assert m2 is m1                       # cached object, no re-evaluation
+    assert eng.cache_info()["hits"] == 1
+    # label/count do not affect metrics: same cache entry
+    m3 = eng.cim_metrics([(g.scaled(label="x", count=7), cfg)])[0]
+    assert m3 is m1
+    # eviction respects the LRU bound
+    small = SweepEngine(cache_size=2)
+    for m in (16, 32, 64, 128):
+        small.baseline_metrics([GEMM(m, 64, 64)])
+    assert small.cache_info()["size"] == 2
+
+
+def test_unknown_backend_rejected():
+    g = GEMM(64, 64, 64)
+    with pytest.raises(ValueError, match="unknown planner backend"):
+        decide(g, backend="vectorised")
+    with pytest.raises(ValueError, match="unknown planner backend"):
+        plan_workload([g], backend="batched")
+
+
+def test_order_mode_greedy_falls_back_to_scalar():
+    g = GEMM(256, 512, 512)
+    d = decide(g, CONFIGS, order_mode="greedy", backend="vectorized")
+    ds = decide(g, CONFIGS, order_mode="greedy", backend="scalar")
+    assert d.best_energy == ds.best_energy
+    with pytest.raises(ValueError):
+        SweepEngine().cim_metrics([(g, CONFIGS["Digital-6T@RF"])],
+                                  order_mode="greedy")
+
+
+def _fake_metrics(energy, time):
+    return metrics_from_row(1000.0, {"energy_pj": energy, "time_ns": time})
+
+
+def test_summarize_uses_eligible_winner():
+    """energy_gain_x must come from the option decide() deploys, not from
+    an unconstrained min-energy config the throughput floor rules out."""
+    g = GEMM(64, 64, 64)
+    base = _fake_metrics(energy=100.0, time=10.0)          # 100 gflops eq.
+    options = {
+        # eligible winner: keeps throughput, halves energy
+        "good": _fake_metrics(energy=50.0, time=12.0),
+        # ineligible tempter: 10x energy win but 100x throughput collapse
+        "slow": _fake_metrics(energy=10.0, time=1000.0),
+    }
+    d = make_decision(g, base, options, throughput_floor=0.5)
+    assert d.best_energy == "good"
+    s = summarize([d])
+    assert s["energy_gain_x"] == pytest.approx(100.0 / 50.0)
+
+
+def test_make_decision_shared_by_both_backends():
+    g = GEMM(512, 1024, 1024)
+    ds = decide(g, CONFIGS, backend="scalar")
+    rebuilt = make_decision(g, ds.baseline, ds.options)
+    assert rebuilt.best_energy == ds.best_energy
+    assert rebuilt.use_cim == ds.use_cim
+
+
+def test_serving_kernel_plan_gates_decode_gemvs():
+    """ServeSession consults the batched planner: per-token decode GEMMs
+    of a tiny model are "don't CiM" (the paper's M=1 pathology)."""
+    from repro.configs import ARCHS, RunConfig, reduced
+    from repro.models import init
+    from repro.serving import ServeSession
+    import jax
+
+    cfg = reduced(ARCHS["qwen2-7b"])
+    rc = RunConfig(remat=False, attn_impl="naive")
+    params = init(jax.random.PRNGKey(0), cfg)
+    s = ServeSession(cfg, rc, params, max_len=32, batch=2)
+    plan = s.kernel_plan
+    assert plan and all(isinstance(d, Decision) for d in plan.values())
+    assert s.kernel_plan is plan          # lazily computed once
+    # batch-2 decode: every GEMM is tiny/low-reuse -> nothing offloads
+    gemvs = [lab for lab in plan if "decode" in lab or "Wq" in lab]
+    assert gemvs
+    for lab in gemvs:
+        assert s.use_cim_for(lab) == plan[lab].use_cim
+    assert not s.use_cim_for("no-such-gemm")
