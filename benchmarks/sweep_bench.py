@@ -10,8 +10,21 @@ parity.  Three numbers matter:
   * cached_s      — vectorized backend, warm LRU cache (the serving
                     engine's repeat-query case).
 
+The cold measurement explicitly drops the compiled kernels first
+(`sweep.jit_cache_clear`), so "cold_jit" means cold no matter what ran
+earlier in the process (benchmarks/run.py runs other planner benches
+before this one).  Scalar, warm and cached runs take the best of
+`repeats` samples to shrug off transient machine contention, and the derived
+output carries a `sanity_ok` flag asserting the expected
+cold > warm > cached ordering plus provenance (git SHA, host,
+timestamp) so a mismeasured run is self-describing rather than a silent
+bogus regression.
+
 Writes BENCH_planner.json (repo root by default; $BENCH_PLANNER_OUT
-overrides) so CI tracks the trajectory PR over PR.
+overrides) so CI tracks the trajectory PR over PR; a run failing either
+gate (verdict parity, timing sanity) is quarantined to *.failed instead
+so it can't replace the trusted trajectory entry, and running this
+module directly (as CI does) then exits nonzero.
 
 Run directly:  PYTHONPATH=src python -m benchmarks.sweep_bench
 """
@@ -19,12 +32,18 @@ from __future__ import annotations
 
 import json
 import os
+import socket
+import subprocess
+import sys
 import time
+from datetime import datetime, timezone
+
+import jax
 
 from repro.configs import ARCHS, SHAPES
 from repro.core.llm_workloads import gemms_of_model
 from repro.core.planner import plan_workload
-from repro.core.sweep import cache_clear, cache_info
+from repro.core.sweep import cache_clear, cache_info, jit_cache_clear
 
 
 def full_llm_gemm_set():
@@ -35,33 +54,67 @@ def full_llm_gemm_set():
     return gemms
 
 
-def planner_sweep_speed(write_json: bool = True):
+def _provenance() -> dict:
+    try:
+        # --dirty marks artifacts produced by uncommitted code: the bare
+        # sha alone would claim a commit that cannot reproduce the run
+        sha = subprocess.check_output(
+            ["git", "describe", "--always", "--dirty"], text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        sha = "unknown"
+    return {"git_sha": sha,
+            "host": socket.gethostname(),
+            "timestamp_utc": datetime.now(timezone.utc)
+            .strftime("%Y-%m-%dT%H:%M:%SZ"),
+            "jax": jax.__version__,
+            "device": jax.devices()[0].platform}
+
+
+def _best_of(repeats: int, fn, setup=None):
+    """(best wall time, last result) of `repeats` samples of fn()."""
+    best, result = float("inf"), None
+    for _ in range(repeats):
+        if setup is not None:
+            setup()
+        t0 = time.perf_counter()
+        result = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, result
+
+
+def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
     gemms = full_llm_gemm_set()
 
-    # start from a cold cache even when earlier benches warmed it:
-    # otherwise the warm-up batch below shrinks to the uncached remainder
-    # and the timed run pays the full-workload jit compile instead.
+    # honest cold-jit: drop both the compiled kernels and the result
+    # cache, so "cold" is cold even when earlier benches in this process
+    # (run.py order) already traced the kernels or warmed the LRU.
     cache_clear()
+    jit_cache_clear()
     t0 = time.perf_counter()
     plan_workload(gemms, backend="vectorized")
     cold_s = time.perf_counter() - t0          # includes jit compilation
 
-    cache_clear()
-    t0 = time.perf_counter()
-    batched = plan_workload(gemms, backend="vectorized")
-    batched_s = time.perf_counter() - t0       # warm jit, cold cache
-
-    t0 = time.perf_counter()
-    plan_workload(gemms, backend="vectorized")
-    cached_s = time.perf_counter() - t0        # warm LRU cache
-
-    t0 = time.perf_counter()
-    scalar = plan_workload(gemms, backend="scalar")
-    scalar_s = time.perf_counter() - t0
+    # best of `repeats` samples each, so a transient contention spike
+    # can't record e.g. a warm run slower than cold
+    batched_s, batched = _best_of(           # warm jit, cold result cache
+        repeats, lambda: plan_workload(gemms, backend="vectorized"),
+        setup=cache_clear)
+    cached_s, _ = _best_of(                  # warm LRU cache
+        repeats, lambda: plan_workload(gemms, backend="vectorized"))
+    scalar_s, scalar = _best_of(
+        repeats, lambda: plan_workload(gemms, backend="scalar"))
 
     mismatches = sum(
         a.use_cim != b.use_cim or a.best_energy != b.best_energy
         for a, b in zip(batched, scalar))
+
+    sanity_ok = cold_s > batched_s > cached_s
+    if not sanity_ok:
+        print(f"WARNING: planner_sweep_speed ordering violated "
+              f"(cold {cold_s:.3f}s, warm {batched_s:.3f}s, cached "
+              f"{cached_s:.4f}s) — machine noisy, do not commit this run",
+              file=sys.stderr)
 
     derived = {
         "n_gemms": len(gemms),
@@ -72,14 +125,21 @@ def planner_sweep_speed(write_json: bool = True):
         "speedup_x": round(scalar_s / batched_s, 1),
         "cached_speedup_x": round(scalar_s / cached_s, 1),
         "verdict_mismatches": mismatches,
+        "sanity_ok": sanity_ok,
         "cache": cache_info(),
+        "provenance": _provenance(),
     }
-    rows = [{"backend": "scalar", "seconds": scalar_s},
-            {"backend": "vectorized_cold_jit", "seconds": cold_s},
-            {"backend": "vectorized", "seconds": batched_s},
-            {"backend": "vectorized_cached", "seconds": cached_s}]
+    rows = [{"backend": "scalar", "seconds": round(scalar_s, 4)},
+            {"backend": "vectorized_cold_jit", "seconds": round(cold_s, 4)},
+            {"backend": "vectorized", "seconds": round(batched_s, 4)},
+            {"backend": "vectorized_cached", "seconds": round(cached_s, 4)}]
     if write_json:
         out = os.environ.get("BENCH_PLANNER_OUT", "BENCH_planner.json")
+        if derived["verdict_mismatches"] or not sanity_ok:
+            # quarantine: callers like benchmarks/run.py don't see the
+            # __main__ gates below, and a bad run must not silently
+            # replace the trusted trajectory entry
+            out += ".failed"
         with open(out, "w") as f:
             json.dump(derived, f, indent=1)
     return rows, derived
@@ -88,3 +148,12 @@ def planner_sweep_speed(write_json: bool = True):
 if __name__ == "__main__":
     _, derived = planner_sweep_speed()
     print(json.dumps(derived, indent=1))
+    # CI runs this module directly: a parity regression or a mismeasured
+    # run must turn the job red, not just ship a json artifact recording
+    # the breakage as the official trajectory entry
+    if derived["verdict_mismatches"]:
+        sys.exit(f"verdict parity regression: batched != scalar on "
+                 f"{derived['verdict_mismatches']} GEMMs")
+    if not derived["sanity_ok"]:
+        sys.exit("timing sanity violated (see WARNING above): rerun on a "
+                 "quiet machine before trusting this artifact")

@@ -117,6 +117,21 @@ def test_sweep_cache_hits_and_identity():
     assert small.cache_info()["size"] == 2
 
 
+def test_jit_cache_clear_preserves_results():
+    # benchmarks drop the compiled kernels to take an honest cold-jit
+    # sample; recompiling must reproduce identical metrics
+    from repro.core.sweep import jit_cache_clear
+    eng = SweepEngine()
+    g = GEMM(64, 128, 128)
+    cfg = CONFIGS["Digital-6T@RF"]
+    before = eng.cim_metrics([(g, cfg)])[0]
+    jit_cache_clear()
+    eng.cache_clear()
+    after = eng.cim_metrics([(g, cfg)])[0]
+    assert after.energy_pj == before.energy_pj
+    assert after.time_ns == before.time_ns
+
+
 def test_unknown_backend_rejected():
     g = GEMM(64, 64, 64)
     with pytest.raises(ValueError, match="unknown planner backend"):
