@@ -2,17 +2,25 @@
 
 Times `plan_workload` over the FULL llm_workloads GEMM set (every assigned
 arch x train_4k + decode_32k) through both backends and checks verdict
-parity.  Three numbers matter:
+parity.  The headline numbers:
 
   * scalar_s      — the original per-call Python path,
   * batched_s     — vectorized backend, warm jit, cold result cache
                     (steady-state planning of a never-seen workload),
   * cached_s      — vectorized backend, warm LRU cache (the serving
-                    engine's repeat-query case).
+                    engine's repeat-query case),
+  * greedy_*      — the same comparison under order_mode="greedy"
+                    (per-row smallest-factor-outermost order selected
+                    in-kernel — previously a scalar-only path),
+  * sharded       — the whole batch row-sharded with shard_map over an
+                    explicit >=1-device mesh (launch.mesh.row_mesh),
+                    with a bitwise metrics-parity check against the
+                    unsharded engine.
 
 The cold measurement explicitly drops the compiled kernels first
-(`sweep.jit_cache_clear`), so "cold_jit" means cold no matter what ran
-earlier in the process (benchmarks/run.py runs other planner benches
+(`sweep.jit_cache_clear` — every jitted variant, greedy and sharded
+included, lives in one registry), so "cold_jit" means cold no matter what
+ran earlier in the process (benchmarks/run.py runs other planner benches
 before this one).  Scalar, warm and cached runs take the best of
 `repeats` samples to shrug off transient machine contention, and the derived
 output carries a `sanity_ok` flag asserting the expected
@@ -21,10 +29,11 @@ timestamp) so a mismeasured run is self-describing rather than a silent
 bogus regression.
 
 Writes BENCH_planner.json (repo root by default; $BENCH_PLANNER_OUT
-overrides) so CI tracks the trajectory PR over PR; a run failing either
-gate (verdict parity, timing sanity) is quarantined to *.failed instead
-so it can't replace the trusted trajectory entry, and running this
-module directly (as CI does) then exits nonzero.
+overrides) so CI tracks the trajectory PR over PR; a run failing any
+gate (verdict parity — exact or greedy —, sharded parity, timing sanity)
+is quarantined to *.failed instead so it can't replace the trusted
+trajectory entry, and running this module directly (as CI does) then
+exits nonzero.
 
 Run directly:  PYTHONPATH=src python -m benchmarks.sweep_bench
 """
@@ -43,7 +52,9 @@ import jax
 from repro.configs import ARCHS, SHAPES
 from repro.core.llm_workloads import gemms_of_model
 from repro.core.planner import plan_workload
-from repro.core.sweep import cache_clear, cache_info, jit_cache_clear
+from repro.core.sweep import (SweepEngine, cache_clear, cache_info,
+                              jit_cache_clear, plan_workload_batched)
+from repro.launch.mesh import row_mesh
 
 
 def full_llm_gemm_set():
@@ -102,12 +113,49 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
         setup=cache_clear)
     cached_s, _ = _best_of(                  # warm LRU cache
         repeats, lambda: plan_workload(gemms, backend="vectorized"))
+    # snapshot now: the greedy runs below clear the result cache again,
+    # and the artifact should record the warm-LRU hit/miss telemetry
+    cache_after_cached = cache_info()
     scalar_s, scalar = _best_of(
         repeats, lambda: plan_workload(gemms, backend="scalar"))
 
     mismatches = sum(
         a.use_cim != b.use_cim or a.best_energy != b.best_energy
         for a, b in zip(batched, scalar))
+
+    # --- greedy order mode: previously a silent scalar fallback, now an
+    # in-kernel per-row order selection — track its speedup separately
+    greedy_s, greedy = _best_of(
+        repeats,
+        lambda: plan_workload(gemms, order_mode="greedy",
+                              backend="vectorized"),
+        setup=cache_clear)
+    greedy_scalar_s, greedy_scalar = _best_of(
+        repeats,
+        lambda: plan_workload(gemms, order_mode="greedy",
+                              backend="scalar"))
+    greedy_mismatches = sum(
+        a.use_cim != b.use_cim or a.best_energy != b.best_energy
+        for a, b in zip(greedy, greedy_scalar))
+
+    # --- row-sharded evaluation over an explicit mesh of all local
+    # devices (>= 1: a 1-device mesh still exercises the shard_map path);
+    # parity is enforced bitwise on the chosen option's metrics against
+    # an explicitly UNSHARDED engine — the default engine auto-shards on
+    # multi-device accelerator hosts, so comparing against `batched`
+    # there would check the sharded kernel against itself
+    mesh = row_mesh(jax.devices())
+    sharded_engine = SweepEngine(mesh=mesh)
+    unsharded = plan_workload_batched(gemms, engine=SweepEngine(mesh=None))
+    sharded_s, sharded = _best_of(
+        repeats,
+        lambda: plan_workload_batched(gemms, engine=sharded_engine),
+        setup=sharded_engine.cache_clear)
+    sharded_parity_ok = all(
+        a.use_cim == b.use_cim and a.best_energy == b.best_energy
+        and a.chosen.energy_pj == b.chosen.energy_pj
+        and a.chosen.time_ns == b.chosen.time_ns
+        for a, b in zip(sharded, unsharded))
 
     sanity_ok = cold_s > batched_s > cached_s
     if not sanity_ok:
@@ -125,17 +173,31 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
         "speedup_x": round(scalar_s / batched_s, 1),
         "cached_speedup_x": round(scalar_s / cached_s, 1),
         "verdict_mismatches": mismatches,
+        "greedy_scalar_s": round(greedy_scalar_s, 3),
+        "greedy_batched_s": round(greedy_s, 3),
+        "greedy_speedup_x": round(greedy_scalar_s / greedy_s, 1),
+        "greedy_verdict_mismatches": greedy_mismatches,
+        "sharded": {"devices": mesh.size,
+                    "seconds": round(sharded_s, 3),
+                    "parity_ok": sharded_parity_ok},
         "sanity_ok": sanity_ok,
-        "cache": cache_info(),
+        "cache": cache_after_cached,
         "provenance": _provenance(),
     }
     rows = [{"backend": "scalar", "seconds": round(scalar_s, 4)},
             {"backend": "vectorized_cold_jit", "seconds": round(cold_s, 4)},
             {"backend": "vectorized", "seconds": round(batched_s, 4)},
-            {"backend": "vectorized_cached", "seconds": round(cached_s, 4)}]
+            {"backend": "vectorized_cached", "seconds": round(cached_s, 4)},
+            {"backend": "scalar_greedy",
+             "seconds": round(greedy_scalar_s, 4)},
+            {"backend": "vectorized_greedy", "seconds": round(greedy_s, 4)},
+            {"backend": f"vectorized_sharded_{mesh.size}dev",
+             "seconds": round(sharded_s, 4)}]
     if write_json:
         out = os.environ.get("BENCH_PLANNER_OUT", "BENCH_planner.json")
-        if derived["verdict_mismatches"] or not sanity_ok:
+        if (derived["verdict_mismatches"]
+                or derived["greedy_verdict_mismatches"]
+                or not sharded_parity_ok or not sanity_ok):
             # quarantine: callers like benchmarks/run.py don't see the
             # __main__ gates below, and a bad run must not silently
             # replace the trusted trajectory entry
@@ -151,9 +213,13 @@ if __name__ == "__main__":
     # CI runs this module directly: a parity regression or a mismeasured
     # run must turn the job red, not just ship a json artifact recording
     # the breakage as the official trajectory entry
-    if derived["verdict_mismatches"]:
+    bad = derived["verdict_mismatches"] + derived["greedy_verdict_mismatches"]
+    if bad:
         sys.exit(f"verdict parity regression: batched != scalar on "
-                 f"{derived['verdict_mismatches']} GEMMs")
+                 f"{bad} GEMMs (exact + greedy)")
+    if not derived["sharded"]["parity_ok"]:
+        sys.exit("sharded parity regression: row-sharded metrics differ "
+                 "from the single-device engine")
     if not derived["sanity_ok"]:
         sys.exit("timing sanity violated (see WARNING above): rerun on a "
                  "quiet machine before trusting this artifact")

@@ -27,6 +27,25 @@ RELEVANT = {
     "Z": frozenset({"M", "N"}),
 }
 
+# Canonical dim order the greedy rule breaks trip-count ties with (it is
+# the order candidate_mappings emits DRAM loops in, and Python's stable
+# sort preserves it).  vectorized.evaluate_flat's in-kernel greedy
+# selection mirrors exactly this (dim, index) tie-break, so the batched
+# and scalar greedy paths pick the same permutation bit-for-bit.
+CANONICAL_DIMS = ("M", "K", "N")
+
+# The DRAM-order selection modes every layer supports.  Single source of
+# truth: vectorized.evaluate_flat, sweep.SweepEngine and planner.decide
+# all validate against this tuple, so no layer can drift into accepting
+# (or silently rerouting) a mode another layer rejects.
+ORDER_MODES = ("exact", "greedy")
+
+
+def check_order_mode(order_mode: str) -> None:
+    if order_mode not in ORDER_MODES:
+        raise ValueError(f"unknown order_mode {order_mode!r}; "
+                         f"expected one of {ORDER_MODES}")
+
 
 def ceil_div(a: int, b: int) -> int:
     return -(-a // b)
@@ -90,9 +109,22 @@ def greedy_order(loops: Sequence[Loop]) -> tuple[Loop, ...]:
     tensors' access factors — the Fig. 4 argument), descending inward.
 
     Returned order is innermost-first (consistent with `revisit_factor`):
-    largest factor innermost ... smallest factor outermost.
+    largest factor innermost ... smallest factor outermost.  Ties keep
+    the input order (stable sort) — see CANONICAL_DIMS.
     """
     return tuple(sorted(loops, key=lambda lf: -lf[1]))
+
+
+def greedy_perm(trips: dict) -> tuple[str, ...]:
+    """The innermost-first dim permutation the greedy rule picks for the
+    given {dim: trip-count} DRAM loops (dims considered in CANONICAL_DIMS
+    order, as candidate_mappings emits them).
+
+    This is the scalar reference for the per-row permutation
+    vectorized.evaluate_flat selects in-kernel under order_mode="greedy".
+    """
+    loops = [(d, trips[d]) for d in CANONICAL_DIMS]
+    return tuple(d for d, _ in greedy_order(loops))
 
 
 @dataclasses.dataclass(frozen=True)

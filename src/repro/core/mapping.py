@@ -286,6 +286,7 @@ def priority_map(gemm: GEMM, cfg: CiMSystemConfig,
 
     order_mode: "exact" evaluates all DRAM-level loop permutations inside
     the cost model; "greedy" fixes the paper's smallest-factor-outermost
-    order up front.
+    order up front (the batched path re-derives the same order per row
+    in-kernel from the m2/k2/n2 trips — see vectorized.evaluate_flat).
     """
     return candidate_mappings(gemm, cfg, order_mode)[0]

@@ -14,11 +14,12 @@ Backends (`decide` / `plan_workload` accept backend="vectorized"|"scalar"):
   * "vectorized" (default): the batched sweep engine (repro.core.sweep) —
     all GEMMs x configs x candidate mappings scored in one fused jax.jit
     call through vectorized.evaluate_flat, with an LRU result cache keyed
-    by (GEMM, config, order_mode).  Only order_mode="exact" runs batched;
-    "greedy" transparently falls back to the scalar path.
+    by (GEMM, config, order_mode).  Both order modes ("exact" and
+    "greedy") run fully batched — the greedy smallest-factor-outermost
+    DRAM order is selected per row in-kernel, so there is no scalar
+    fallback on any path.
   * "scalar": the original per-call Python cost model — kept as the
-    reference for parity testing (tests/test_sweep.py) and for
-    order_mode="greedy".
+    reference for parity testing (tests/test_sweep.py).
 Both backends apply the identical eligibility and "when" rules
 (`make_decision`), so verdicts can only differ by float tolerance.
 """
@@ -30,11 +31,21 @@ from typing import Iterable, Sequence
 from .baseline import evaluate_baseline
 from .cost_model import Metrics, evaluate
 from .gemm import GEMM
+from .loopnest import check_order_mode
 from .memory import CiMSystemConfig, configb_count
 from .primitives import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T,
                          CiMPrimitive)
 
 DEFAULT_PRIMS = (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T)
+
+
+def _check_args(backend: str, order_mode: str) -> None:
+    """Shared argument validation: both backends accept exactly the same
+    (backend, order_mode) combinations — no mode silently reroutes."""
+    if backend not in ("vectorized", "scalar"):
+        raise ValueError(f"unknown planner backend {backend!r}; "
+                         "expected 'vectorized' or 'scalar'")
+    check_order_mode(order_mode)
 
 
 def standard_configs(prims: Sequence[CiMPrimitive] = DEFAULT_PRIMS
@@ -112,13 +123,11 @@ def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
     """What/when/where for one GEMM.
 
     backend="vectorized" routes through the batched sweep engine (cached,
-    one fused device call); backend="scalar" is the Python reference.
-    order_mode="greedy" always runs scalar (see module docstring)."""
-    if backend not in ("vectorized", "scalar"):
-        raise ValueError(f"unknown planner backend {backend!r}; "
-                         "expected 'vectorized' or 'scalar'")
+    one fused device call, both order modes in-kernel);
+    backend="scalar" is the Python reference."""
+    _check_args(backend, order_mode)
     configs = configs or standard_configs()
-    if backend == "vectorized" and order_mode == "exact":
+    if backend == "vectorized":
         from .sweep import decide_batched
         return decide_batched(gemm, configs, order_mode, throughput_floor)
     base = evaluate_baseline(gemm)
@@ -136,11 +145,9 @@ def plan_workload(gemms: Iterable[GEMM],
     The default vectorized backend flattens the entire workload into one
     batched evaluation (plus one for the baselines) instead of looping
     decide() — 10x+ faster on full llm_workloads sweeps (see
-    benchmarks/sweep_bench.py)."""
-    if backend not in ("vectorized", "scalar"):
-        raise ValueError(f"unknown planner backend {backend!r}; "
-                         "expected 'vectorized' or 'scalar'")
-    if backend == "vectorized" and order_mode == "exact":
+    benchmarks/sweep_bench.py) — in either order mode."""
+    _check_args(backend, order_mode)
+    if backend == "vectorized":
         from .sweep import plan_workload_batched
         return plan_workload_batched(gemms, configs, order_mode)
     return [decide(g, configs, order_mode, backend=backend)

@@ -14,8 +14,11 @@ Three entry points:
   * `evaluate_flat(batch)` — the fused kernel.  Every row of `batch` is a
     complete (GEMM dims, system config, mapping) tuple, so one call can
     mix GEMMs, CiM@RF and CiM@SMEM configs, and primitives freely.  The
-    DRAM loop order is scored for all 6 permutations in-kernel and the
-    min-energy order is taken (exactly cost_model's "exact" mode).
+    DRAM loop order is scored for all 6 permutations in-kernel; under
+    order_mode="exact" the min-energy order is taken (cost_model's
+    "exact" mode), under order_mode="greedy" each row keeps its
+    smallest-factor-outermost order, selected in-kernel (see
+    `_greedy_mask`) so the greedy planner path needs no scalar fallback.
   * `evaluate_batch(gemm, cfg, mappings)` — legacy convenience wrapper:
     B mappings of one GEMM on one config (broadcasts dims/config).
   * `evaluate_baseline_flat(batch)` — the tensor-core baseline counterpart
@@ -37,7 +40,7 @@ import numpy as np
 from .baseline import SPATIAL_M, SPATIAL_N, tile_candidates
 from .cost_model import DRAM_STREAM_EFFICIENCY
 from .gemm import GEMM
-from .loopnest import RELEVANT
+from .loopnest import CANONICAL_DIMS, RELEVANT, check_order_mode
 from .mapping import PSUM_BYTES
 from .memory import DRAM, RF, SMEM, TEMPORAL_REDUCTION_PJ, CiMSystemConfig
 from .primitives import TENSOR_CORE, TensorCoreSpec
@@ -108,18 +111,54 @@ def _coverage_vec(trips: dict, tensor: str):
     return c
 
 
-def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY):
+# Tie-break index of each dim in the greedy rule (loopnest.CANONICAL_DIMS:
+# Python's stable sort keeps the candidate_mappings emission order M, K, N
+# on equal trip counts).
+_GREEDY_IDX = {d: i for i, d in enumerate(CANONICAL_DIMS)}
+
+
+def _greedy_mask(trips: dict, order: tuple):
+    """(B,) bool: rows whose greedy DRAM order is exactly `order`.
+
+    loopnest.greedy_order is a stable descending sort on trip counts
+    (largest innermost), i.e. the total order key(d) = (-trips[d],
+    canonical index).  A permutation (d0, d1, d2), innermost-first, is the
+    greedy one iff key(d0) < key(d1) < key(d2) — exactly one of the 6
+    static permutations matches per row, so selecting each order's cost
+    under its mask reproduces the scalar greedy path bit-for-bit.
+    """
+    def precedes(a, b):
+        ta, tb = trips[a], trips[b]
+        if _GREEDY_IDX[a] < _GREEDY_IDX[b]:   # static: tie keeps a first
+            return ta >= tb
+        return ta > tb
+
+    d0, d1, d2 = order
+    return precedes(d0, d1) & precedes(d1, d2)
+
+
+def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
+                  order_mode: str = "exact"):
     """Evaluate B flattened (GEMM, config, mapping) rows at once.
 
     batch: dict of (B,) arrays for every name in FLAT_FIELDS.  Rows may
     mix different GEMMs, primitives, and CiM levels (RF vs SMEM — the two
     traffic models are computed branch-free and selected per row).
 
+    order_mode (static under jit): "exact" keeps the min-energy DRAM loop
+    order of all 6 permutations (cost_model's exact mode); "greedy" keeps
+    each row's smallest-factor-outermost order — the per-row permutation
+    is computed in-kernel from the (m2, k2, n2) trip counts and selected
+    via the `_greedy_mask` one-hot over the 6 statically unrolled orders,
+    mirroring loopnest.greedy_order exactly (tie-breaks included), so
+    order_mode="greedy" needs no scalar fallback.
+
     Returns dict of (B,) arrays: valid (bool), energy_pj, time_ns,
     tops_per_w, gflops, utilization, compute_ns, dram_ns, smem_ns,
     dram_bytes, smem_bytes.  Invalid rows get inf energy/time and zero
     rate metrics.
     """
+    check_order_mode(order_mode)
     f32 = jnp.float32
     M = batch["M"].astype(f32)
     N = batch["N"].astype(f32)
@@ -194,7 +233,9 @@ def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY):
         at_rf, RF.access_energy_pj / RF.access_granularity_bytes,
         SMEM.access_energy_pj / SMEM.access_granularity_bytes)
 
-    # --- DRAM traffic over the 6 loop orders; keep the min-energy one ---
+    # --- DRAM traffic over the 6 loop orders.  "exact": keep the
+    # min-energy order; "greedy": keep each row's greedy order (one-hot
+    # `_greedy_mask` selection — exactly one order matches per row). ---
     trips = {"M": m2, "K": k2, "N": n2}
     w_foot = jnp.minimum(K, k0 * fk) * jnp.minimum(N, n0 * fn)
     z_tile = m1 * jnp.minimum(N, n0 * fn)
@@ -217,9 +258,12 @@ def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY):
                   * DRAM.access_energy_pj)
         e_w_write = w_fills * host_pj_per_byte
         energy = e_dram + e_w_write + e_smem + e_mac + e_red
-        better = energy < best_energy
-        best_energy = jnp.where(better, energy, best_energy)
-        best_dram = jnp.where(better, dram_bytes, best_dram)
+        if order_mode == "greedy":
+            keep = _greedy_mask(trips, order)
+        else:
+            keep = energy < best_energy
+        best_energy = jnp.where(keep, energy, best_energy)
+        best_dram = jnp.where(keep, dram_bytes, best_dram)
 
     dram_ns = best_dram / (DRAM.bandwidth_bytes_per_cycle * dram_eff)
     smem_ns = smem_bytes / SMEM.bandwidth_bytes_per_cycle

@@ -204,6 +204,24 @@ def _compile_costs(cfg, shape, mesh, rc):
     }, coll["by_type"], op_census(hlo)
 
 
+def _planner_telemetry(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """What/when/where verdict summary + sweep-cache telemetry for a
+    decode cell: the serving engine consults the same batched planner on
+    every ServeSession.kernel_plan build, so the hit/miss delta recorded
+    here is exactly what production traffic over this cell's shapes
+    would see (LRU sizing signal)."""
+    from ..core.llm_workloads import gemms_of_model
+    from ..core.planner import plan_workload, summarize
+    from ..core.sweep import measured_cache_delta
+    decisions, tel = measured_cache_delta(
+        lambda: plan_workload(gemms_of_model(cfg, shape),
+                              backend="vectorized"))
+    return {"summary": summarize(decisions),
+            "plan_hits": tel["plan_hits"],
+            "plan_misses": tel["plan_misses"],
+            "cache": tel["engine"]}
+
+
 def lower_cell(arch: str, shape_name: str, mesh_kind: str,
                rc_overrides: dict | None = None,
                skip_cost_passes: bool = False):
@@ -258,7 +276,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
             microbatches=rc.microbatches,
             kv_cache_bytes_per_el=1 if rc.kv_cache_dtype == "int8" else 2))
 
-    return {
+    res = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "status": "ok", "chips": chips,
         "run_config": {"optimizer": rc.optimizer,
@@ -276,6 +294,9 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
         "op_census": census,
         "roofline": rf.row(),
     }
+    if shape.kind == "decode":
+        res["planner"] = _planner_telemetry(cfg, shape)
+    return res
 
 
 def all_cells():

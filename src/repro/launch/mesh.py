@@ -45,6 +45,14 @@ def single_pod_mesh_from(devices):
                                   ("data", "model"))
 
 
+def row_mesh(devices=None, axis: str = "rows"):
+    """1-D mesh over `devices` (default: all) for row-sharded batch
+    evaluation — the sweep engine splits its flattened (GEMM, config,
+    mapping) row batches over this axis (repro.core.sweep)."""
+    devices = list(devices if devices is not None else jax.devices())
+    return make_mesh_from_devices(devices, (len(devices),), (axis,))
+
+
 def small_mesh(n_data: int = 1, n_model: int = 1):
     """Tiny mesh for CPU tests (devices must already exist)."""
     devs = jax.devices()[: n_data * n_model]

@@ -73,6 +73,29 @@ def roofline_table(cells: list[dict], mesh: str = "single") -> str:
     return "\n".join(lines)
 
 
+def planner_cache_table(cells: list[dict]) -> str:
+    """Per-decode-cell what/when/where summary + sweep-cache telemetry
+    (repro.core.sweep LRU hit/miss counters recorded at dry-run time —
+    the cache-sizing signal for serving traffic)."""
+    lines = ["| arch | shape | mesh | cim frac | energy gain | "
+             "plan hits/misses | engine cache |",
+             "|---|---|---|---|---|---|---|"]
+    found = False
+    for c in cells:
+        p = c.get("planner")
+        if c["status"] != "ok" or not p:
+            continue
+        found = True
+        s = p["summary"]
+        eng = p["cache"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{s['cim_fraction']:.2f} | {s['energy_gain_x']:.2f}x | "
+            f"{p['plan_hits']}/{p['plan_misses']} | "
+            f"{eng['hits']}h/{eng['misses']}m size={eng['size']} |")
+    return "\n".join(lines) if found else "(no decode cells with planner telemetry)"
+
+
 def summarize(cells: list[dict]) -> dict:
     ok = [c for c in cells if c["status"] == "ok"]
     skipped = [c for c in cells if c["status"] == "skipped"]
@@ -102,5 +125,7 @@ if __name__ == "__main__":
     print(roofline_table(cells, "single"))
     print("\n## Roofline (multi-pod, 512 chips)\n")
     print(roofline_table(cells, "multi"))
+    print("\n## Planner (decode cells: what/when/where + sweep cache)\n")
+    print(planner_cache_table(cells))
     print("\n## Summary\n")
     print(json.dumps(summarize(cells), indent=1))

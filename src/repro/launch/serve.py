@@ -50,11 +50,16 @@ def main():
     out = sess.generate(prompt, n_new=args.new_tokens,
                         temperature=args.temperature, seed=args.seed)
     dt = time.perf_counter() - t0
+    plan = sess.kernel_plan
     print(json.dumps({
         "arch": cfg.name, "generated_shape": list(out.shape),
         "tokens_per_s": args.batch * args.new_tokens / dt,
         "sample_row": [int(x) for x in
                        jax.device_get(out[0]).reshape(-1)[:16]],
+        # what/when/where gates + planner-cache hit/miss telemetry (LRU
+        # sizing is driven by these counters under production traffic)
+        "kernel_plan": {lab: bool(d.use_cim) for lab, d in plan.items()},
+        "planner_cache": sess.plan_cache_telemetry,
     }, indent=1))
 
 

@@ -16,6 +16,7 @@ XLA matmul — the paper's "when NOT to CiM" answer, enforced at runtime.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable
 
 import jax
@@ -66,6 +67,8 @@ class ServeSession:
         self.pos = 0
         self._step = jax.jit(make_serve_step(self.cfg, self.rc))
         self._kernel_plan = None
+        self._plan_cache_telemetry = None
+        self._plan_lock = threading.Lock()
 
     @property
     def kernel_plan(self) -> dict:
@@ -73,16 +76,37 @@ class ServeSession:
 
         Computed lazily on first access through the batched sweep planner
         (plan_workload, backend="vectorized"); the sweep engine's LRU
-        cache makes repeat sessions over the same shapes free."""
+        cache makes repeat sessions over the same shapes free.  The build
+        is locked per session: concurrent first accesses must not
+        double-build (the second build would be all-hits and overwrite
+        the real telemetry)."""
         if self._kernel_plan is None:
-            from ..configs.base import ShapeConfig
-            from ..core.llm_workloads import gemms_of_model
-            from ..core.planner import plan_workload
-            shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
-            gemms = gemms_of_model(self.cfg, shape)
-            decisions = plan_workload(gemms, backend="vectorized")
-            self._kernel_plan = {d.gemm.label: d for d in decisions}
+            with self._plan_lock:
+                if self._kernel_plan is None:
+                    self._build_kernel_plan()
         return self._kernel_plan
+
+    def _build_kernel_plan(self) -> None:
+        from ..configs.base import ShapeConfig
+        from ..core.llm_workloads import gemms_of_model
+        from ..core.planner import plan_workload
+        from ..core.sweep import measured_cache_delta
+        shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
+        gemms = gemms_of_model(self.cfg, shape)
+        # hit/miss delta of THIS plan build plus the engine-wide
+        # totals: production traffic traces drive cache sizing
+        decisions, self._plan_cache_telemetry = measured_cache_delta(
+            lambda: plan_workload(gemms, backend="vectorized"))
+        self._kernel_plan = {d.gemm.label: d for d in decisions}
+
+    @property
+    def plan_cache_telemetry(self) -> dict:
+        """sweep.cache_info() telemetry of this session's kernel_plan
+        build (triggers the build on first access): how many of the
+        session's GEMM verdicts were served from the process-wide LRU vs
+        freshly evaluated, plus the engine-wide counters."""
+        _ = self.kernel_plan
+        return self._plan_cache_telemetry
 
     def use_cim_for(self, label: str) -> bool:
         """The planner's "when" gate for one GEMM of this session (feeds

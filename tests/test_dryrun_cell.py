@@ -65,6 +65,7 @@ def test_unroll_points_divide():
         assert all(L % k == 0 for k in pts), (L, pts)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("cell", [("mamba2-780m", "decode_32k", "single")])
 def test_dryrun_cell_compiles_on_production_mesh(cell, tmp_path):
     """Lower + compile one real (arch x shape) against the 16x16 mesh with
@@ -83,3 +84,8 @@ def test_dryrun_cell_compiles_on_production_mesh(cell, tmp_path):
     assert out["chips"] == 256
     assert out["roofline"]["bottleneck"] in ("compute", "memory",
                                              "collective")
+    # decode cells carry what/when/where verdicts + sweep-cache telemetry
+    p = out["planner"]
+    assert p["summary"]["n_gemms"] > 0
+    assert p["plan_hits"] + p["plan_misses"] > 0
+    assert p["cache"]["size"] > 0

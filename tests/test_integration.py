@@ -19,6 +19,7 @@ RC = RunConfig(remat=False, attn_impl="naive", learning_rate=1e-3,
                warmup_steps=5)
 
 
+@pytest.mark.slow
 def test_tiny_lm_learns():
     cfg = reduced(ARCHS["qwen2-7b"])
     dc = DataConfig(seed=0, vocab=cfg.vocab, seq_len=64, global_batch=8)
@@ -26,6 +27,7 @@ def test_tiny_lm_learns():
     assert res.losses[-1] < res.losses[0] - 0.3
 
 
+@pytest.mark.slow
 def test_crash_resume_is_deterministic():
     cfg = reduced(ARCHS["qwen2-7b"])
     dc = DataConfig(seed=0, vocab=cfg.vocab, seq_len=32, global_batch=4)
@@ -42,6 +44,7 @@ def test_crash_resume_is_deterministic():
                                    rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.slow
 def test_microbatched_grads_match_full_batch():
     from repro.train import make_train_step
     from repro.optim import make_optimizer
@@ -86,6 +89,7 @@ def test_planner_gated_linear_matches_dense():
                                rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_what_when_where_llm_decisions():
     """Paper Table V embodied: train-shape FFN GEMM -> CiM; decode GEMV
     at small batch -> baseline."""

@@ -57,6 +57,7 @@ def _rosenbrockish(params):
     return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum(params["b"] ** 2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("which", ["adamw", "adafactor"])
 def test_optimizers_converge(which):
     params = {"w": jnp.zeros((4, 8)), "b": jnp.ones((8,))}

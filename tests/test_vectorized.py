@@ -30,6 +30,7 @@ def test_batch_matches_scalar_model(m, n, k):
             ref.time_ns, rel=0.02)
 
 
+@pytest.mark.slow
 def test_exhaustive_never_loses_to_priority_mapper():
     """The on-device exhaustive search lower-bounds the priority mapper —
     and the mapper should be within 25% of the global optimum (the
