@@ -1,0 +1,119 @@
+"""Planner-gated serving benchmark: gated vs ungated INT8 decode.
+
+For each benchmarked arch (reduced CPU smoke configs — the mechanism is
+what's measured, not TPU throughput) it builds two quantized
+ServeSessions over identical weights:
+
+  * gated   — the What/When/Where verdicts close the jitted decode step,
+              so CiM-gated projection labels lower to the weight-
+              stationary INT8 Pallas kernel;
+  * ungated — same INT8 weights, every label forced onto the standard
+              XLA path (KernelPlanTable.ungated()).
+
+and records decode tokens/s for both, the % of projections the gated
+program routed to the CiM path, and a logits-parity check (routing must
+not change the math beyond kernel numerics).  Like sweep_bench, a run
+failing the parity gate is quarantined to BENCH_serve.json.failed instead
+of replacing the trusted trajectory entry, and running the module
+directly (as CI does) then exits nonzero.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.serve_gating_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, RunConfig, reduced
+from repro.launch.serve import steady_decode_tokens_per_s
+from repro.models import init
+from repro.serving import ServeSession, cim_fraction
+
+from .sweep_bench import _provenance
+
+# arch -> decode batch.  mamba2 at batch 8 is the mixed-verdict case
+# (ssm-BCdt gates on, the rest stay standard); the attention archs'
+# smoke-size decode GEMVs are all "don't CiM" — the paper's M=1
+# pathology — so their gated program must equal the ungated one.
+BENCH_ARCHS = (("mamba2-780m", 8), ("mistral-nemo-12b", 8),
+               ("qwen2-moe-a2.7b", 8))
+PROMPT_LEN = 6
+NEW_TOKENS = 16
+# gated vs ungated differ only by kernel (Pallas f32-accum vs XLA bf16
+# dequant matmul); logits are O(1) scale in the smoke models
+PARITY_ATOL = 0.05
+
+
+def serve_gating_speed(write_json: bool = True):
+    rc = RunConfig(attn_impl="naive", remat=False)
+    rows, per_arch = [], {}
+    all_parity_ok = True
+    for arch, batch in BENCH_ARCHS:
+        cfg = reduced(ARCHS[arch])
+        params = init(jax.random.PRNGKey(0), cfg)
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (batch, PROMPT_LEN), 0, cfg.vocab)
+        max_len = PROMPT_LEN + NEW_TOKENS + 2
+        gated = ServeSession(cfg, rc, params, max_len=max_len,
+                             batch=batch, quantize=True)
+        ungated = ServeSession(cfg, rc, params, max_len=max_len,
+                               batch=batch, quantize=True, gated=False)
+
+        # parity first (prefill on fresh caches), then throughput
+        lg = gated.prefill(prompt).astype(jnp.float32)
+        lu = ungated.prefill(prompt).astype(jnp.float32)
+        max_diff = float(jnp.max(jnp.abs(lg - lu)))
+        parity_ok = max_diff <= PARITY_ATOL
+        all_parity_ok &= parity_ok
+
+        # interleaved sampling (launch.serve helper): contention hits
+        # gated and ungated symmetrically, jit compile excluded
+        tps_g, tps_u = steady_decode_tokens_per_s(
+            (gated, ungated), prompt, NEW_TOKENS)
+        routes = gated.route_report()
+        row = {"arch": cfg.name, "batch": batch,
+               "tokens_per_s_gated": round(tps_g, 1),
+               "tokens_per_s_ungated": round(tps_u, 1),
+               "cim_routed_pct": round(100.0 * cim_fraction(routes), 1),
+               "parity_max_abs_diff": round(max_diff, 5),
+               "parity_ok": parity_ok}
+        rows.append(row)
+        per_arch[cfg.name] = {
+            **row, "routes": {lab: r["route"] for lab, r in routes.items()},
+            # None when the private jit-cache probe is unavailable (the
+            # retrace gate below then skips rather than false-failing)
+            "decode_executables": gated.decode_executables}
+
+    derived = {
+        "archs": per_arch,
+        "parity_ok": all_parity_ok,
+        "parity_atol": PARITY_ATOL,
+        "new_tokens": NEW_TOKENS,
+        "provenance": _provenance(),
+    }
+    if write_json:
+        out = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+        if not all_parity_ok:
+            # quarantine: a routing-changes-the-math run must not replace
+            # the trusted trajectory entry
+            out += ".failed"
+        with open(out, "w") as f:
+            json.dump(derived, f, indent=1)
+    return rows, derived
+
+
+if __name__ == "__main__":
+    _, derived = serve_gating_speed()
+    print(json.dumps(derived, indent=1))
+    if not derived["parity_ok"]:
+        sys.exit("gating parity regression: gated and ungated INT8 decode "
+                 "disagree beyond kernel-numerics tolerance")
+    bad_retrace = [a for a, d in derived["archs"].items()
+                   if d["decode_executables"] not in (1, None)]
+    if bad_retrace:
+        sys.exit(f"retrace regression: {bad_retrace} compiled more than "
+                 "one decode executable")

@@ -23,8 +23,11 @@ for g in (prefill_gemm, decode_gemm):
     d = decide(g)
     print(f"{g.label:20s} -> {d.what} (use_cim={d.use_cim})")
 
-sess = ServeSession(cfg, rc, params, max_len=64, batch=4)
+sess = ServeSession(cfg, rc, params, max_len=64, batch=4, quantize=True)
+for lab, r in sess.route_report().items():
+    print(f"  {lab:10s} -> {r['route']} (use_cim={r['use_cim']})")
 prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0, cfg.vocab)
 out = sess.generate(prompt, n_new=24, temperature=0.8, seed=7)
 print("generated:", out.shape, "first row:",
-      [int(x) for x in jax.device_get(out[0])[:12]])
+      [int(x) for x in jax.device_get(out[0])[:12]],
+      "decode executables:", sess.decode_executables)

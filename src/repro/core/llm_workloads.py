@@ -32,6 +32,10 @@ def gemms_of_model(cfg: ModelConfig, shape: ShapeConfig) -> list[GEMM]:
     elif cfg.family == "hybrid":
         n_attn = cfg.n_layers // cfg.attn_every
         n_mamba = cfg.n_layers - n_attn
+    elif cfg.family == "vlm" and cfg.vision:
+        # cross-attn layers run the xattn-* projections counted below,
+        # not the self-attn ones — don't double-count them here
+        n_attn = cfg.n_layers - cfg.n_layers // cfg.vision.cross_attn_every
 
     def add(m, n, k, label, count):
         if count > 0 and min(m, n, k) >= 1:
@@ -80,7 +84,9 @@ def gemms_of_model(cfg: ModelConfig, shape: ShapeConfig) -> list[GEMM]:
             if dense_layers and cfg.d_ff:
                 add(M, wn, wk, f"{cfg.name} mlp-{nm}",
                     dense_layers * per_seq)
-    elif cfg.d_ff:
+    elif cfg.d_ff and cfg.family != "ssm":
+        # pure-SSM periods are (mamba, None): no FFN slot exists even if
+        # the config carries a (smoke-default) d_ff
         for nm, wn, wk in (("gate", cfg.d_ff, d), ("up", cfg.d_ff, d),
                            ("down", d, cfg.d_ff)):
             add(M, wn, wk, f"{cfg.name} mlp-{nm}",
@@ -105,6 +111,8 @@ def gemms_of_model(cfg: ModelConfig, shape: ShapeConfig) -> list[GEMM]:
             2 * n_cross * per_seq)
         add(M, cfg.n_heads * dh, d, f"{cfg.name} xattn-Q",
             n_cross * per_seq)
+        add(M, d, cfg.n_heads * dh, f"{cfg.name} xattn-out",
+            n_cross * per_seq)
         if not decode:
             add(s, nimg, dh, f"{cfg.name} xattn-scores",
                 2 * n_cross * cfg.n_heads * per_seq)
@@ -112,3 +120,25 @@ def gemms_of_model(cfg: ModelConfig, shape: ShapeConfig) -> list[GEMM]:
     # --- LM head ---
     add(M, cfg.vocab, d, f"{cfg.name} lm_head", per_seq)
     return out
+
+
+# GEMMs whose labels match these markers multiply two *activations*
+# (attention scores / probability-weighted values): there is no stationary
+# weight to quantize, so the runtime projection gate never sees them.
+ACTIVATION_GEMM_MARKERS = ("qK^T", "pV (decode)", "QK^T", "xattn-scores")
+
+
+def is_projection_label(label: str) -> bool:
+    """True for GEMMs with a stationary weight operand (the labels the
+    model-side `linear(...)` execution layer consumes)."""
+    return not any(m in label for m in ACTIVATION_GEMM_MARKERS)
+
+
+def projection_labels(cfg: ModelConfig, shape: ShapeConfig) -> set[str]:
+    """Short (model-prefix-stripped) labels of all weight projections of
+    one (arch x shape) cell — the exact label set the model stack must
+    route through `models.layers.linear` (coverage-tested)."""
+    prefix = f"{cfg.name} "
+    return {g.label[len(prefix):] if g.label.startswith(prefix) else g.label
+            for g in gemms_of_model(cfg, shape)
+            if is_projection_label(g.label)}

@@ -204,22 +204,35 @@ def _compile_costs(cfg, shape, mesh, rc):
     }, coll["by_type"], op_census(hlo)
 
 
-def _planner_telemetry(cfg: ModelConfig, shape: ShapeConfig) -> dict:
-    """What/when/where verdict summary + sweep-cache telemetry for a
-    decode cell: the serving engine consults the same batched planner on
-    every ServeSession.kernel_plan build, so the hit/miss delta recorded
-    here is exactly what production traffic over this cell's shapes
-    would see (LRU sizing signal)."""
+def _planner_telemetry(cfg: ModelConfig, shape: ShapeConfig,
+                       rc: RunConfig) -> dict:
+    """What/when/where verdict summary + sweep-cache telemetry + executed
+    kernel routes for a decode cell: the serving engine consults the same
+    batched planner on every ServeSession.kernel_plan build, so the
+    hit/miss delta recorded here is exactly what production traffic over
+    this cell's shapes would see (LRU sizing signal).  The routes block
+    traces the plan-gated quantized decode step abstractly
+    (serving.decode_routes) and records which projections would lower to
+    the CiM INT8 Pallas path vs the standard XLA matmul."""
     from ..core.llm_workloads import gemms_of_model
     from ..core.planner import plan_workload, summarize
     from ..core.sweep import measured_cache_delta
+    from ..quant import KernelPlanTable
+    from ..serving import cim_fraction, decode_routes
     decisions, tel = measured_cache_delta(
         lambda: plan_workload(gemms_of_model(cfg, shape),
                               backend="vectorized"))
+    table = KernelPlanTable.from_decisions(decisions,
+                                           model_name=cfg.name)
+    nimg = cfg.vision.n_image_tokens if cfg.family == "vlm" else 0
+    routes = decode_routes(cfg, rc, table, batch=shape.global_batch,
+                           max_len=shape.seq_len, n_image_tokens=nimg)
     return {"summary": summarize(decisions),
             "plan_hits": tel["plan_hits"],
             "plan_misses": tel["plan_misses"],
-            "cache": tel["engine"]}
+            "cache": tel["engine"],
+            "routes": routes,
+            "cim_routed_fraction": cim_fraction(routes)}
 
 
 def lower_cell(arch: str, shape_name: str, mesh_kind: str,
@@ -295,7 +308,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
         "roofline": rf.row(),
     }
     if shape.kind == "decode":
-        res["planner"] = _planner_telemetry(cfg, shape)
+        res["planner"] = _planner_telemetry(cfg, shape, rc)
     return res
 
 

@@ -77,9 +77,9 @@ def planner_cache_table(cells: list[dict]) -> str:
     """Per-decode-cell what/when/where summary + sweep-cache telemetry
     (repro.core.sweep LRU hit/miss counters recorded at dry-run time —
     the cache-sizing signal for serving traffic)."""
-    lines = ["| arch | shape | mesh | cim frac | energy gain | "
-             "plan hits/misses | engine cache |",
-             "|---|---|---|---|---|---|---|"]
+    lines = ["| arch | shape | mesh | cim frac | cim routed | "
+             "energy gain | plan hits/misses | engine cache |",
+             "|---|---|---|---|---|---|---|---|"]
     found = False
     for c in cells:
         p = c.get("planner")
@@ -88,9 +88,15 @@ def planner_cache_table(cells: list[dict]) -> str:
         found = True
         s = p["summary"]
         eng = p["cache"]
+        # executed-route fraction: how many projections the gated decode
+        # step actually lowers to the CiM INT8 path (older cell JSONs
+        # predate the routing block)
+        routed = (f"{p['cim_routed_fraction']:.2f}"
+                  if "cim_routed_fraction" in p else "-")
         lines.append(
             f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
-            f"{s['cim_fraction']:.2f} | {s['energy_gain_x']:.2f}x | "
+            f"{s['cim_fraction']:.2f} | {routed} | "
+            f"{s['energy_gain_x']:.2f}x | "
             f"{p['plan_hits']}/{p['plan_misses']} | "
             f"{eng['hits']}h/{eng['misses']}m size={eng['size']} |")
     return "\n".join(lines) if found else "(no decode cells with planner telemetry)"

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch mistral-nemo-12b \
       --smoke --batch 4 --prompt-len 16 --new-tokens 32
+
+--quantize runs the planner-gated INT8 session (verdicts routed into the
+jitted decode step) and prints the per-label route report plus
+gated-vs-ungated decode tokens/s.
 """
 from __future__ import annotations
 
@@ -10,10 +14,47 @@ import json
 import time
 
 import jax
+import jax.numpy as jnp
 
 from ..configs import ARCHS, RunConfig, reduced
 from ..models import init
-from ..serving import ServeSession
+from ..serving import CIM_ROUTE, ServeSession, cim_fraction
+from ..serving.engine import _token_struct
+
+
+def steady_decode_tokens_per_s(sessions, prompt, n_tokens: int,
+                               repeats: int = 3) -> list[float]:
+    """Steady-state decode throughput per session, best of `repeats`.
+
+    Each session's prefill warms its one jitted executable and fills the
+    cache, so every timed token is a pure decode step — first-run jit
+    compile never pollutes the number (gated and ungated programs
+    compile differently, so timing generate() cold would mostly compare
+    compilers).  Samples ALTERNATE across the sessions so transient
+    machine contention degrades all of them symmetrically: timing
+    back-to-back once recorded a 2.7x split between two byte-identical
+    programs."""
+    if n_tokens < 1:
+        raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
+    for s in sessions:
+        s.reset()
+        s.prefill(prompt)
+    cfg = sessions[0].cfg
+    tok = jnp.zeros(_token_struct(cfg, prompt.shape[0]).shape, jnp.int32)
+
+    def sample(s):
+        t0 = time.perf_counter()
+        for _ in range(n_tokens):
+            logits, s.cache = s._step(s.params, s.cache, tok,
+                                      jnp.int32(s.pos))
+        jax.block_until_ready(logits)
+        return time.perf_counter() - t0
+
+    best = [float("inf")] * len(sessions)
+    for _ in range(repeats):
+        for i, s in enumerate(sessions):
+            best[i] = min(best[i], sample(s))
+    return [prompt.shape[0] * n_tokens / b for b in best]
 
 
 def main():
@@ -26,6 +67,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--kv-cache-dtype", default="bfloat16")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quantize", action="store_true",
+                    help="INT8 weights + planner-gated kernel routing "
+                         "inside the jitted decode step")
     args = ap.parse_args()
 
     cfg = ARCHS[args.arch]
@@ -36,9 +80,10 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = init(key, cfg)
     nimg = cfg.vision.n_image_tokens if cfg.family == "vlm" else 0
-    sess = ServeSession(cfg, rc, params,
-                        max_len=args.prompt_len + args.new_tokens + 1,
-                        batch=args.batch, n_image_tokens=nimg)
+    max_len = args.prompt_len + args.new_tokens + 1
+    sess = ServeSession(cfg, rc, params, max_len=max_len,
+                        batch=args.batch, n_image_tokens=nimg,
+                        quantize=args.quantize)
     if cfg.family == "audio":
         prompt = jax.random.randint(
             key, (args.batch, args.prompt_len, cfg.audio.n_codebooks),
@@ -51,7 +96,7 @@ def main():
                         temperature=args.temperature, seed=args.seed)
     dt = time.perf_counter() - t0
     plan = sess.kernel_plan
-    print(json.dumps({
+    report = {
         "arch": cfg.name, "generated_shape": list(out.shape),
         "tokens_per_s": args.batch * args.new_tokens / dt,
         "sample_row": [int(x) for x in
@@ -60,7 +105,27 @@ def main():
         # sizing is driven by these counters under production traffic)
         "kernel_plan": {lab: bool(d.use_cim) for lab, d in plan.items()},
         "planner_cache": sess.plan_cache_telemetry,
-    }, indent=1))
+    }
+    if args.quantize:
+        # per-label executed routes + gated-vs-ungated decode throughput:
+        # the ungated session keeps the same INT8 weights, so the
+        # steady-state delta is purely the verdict-driven kernel routing
+        # (both sessions are warmed; jit compile is excluded)
+        routes = sess.route_report()
+        ungated = ServeSession(cfg, rc, params, max_len=max_len,
+                               batch=args.batch, n_image_tokens=nimg,
+                               quantize=True, gated=False)
+        tps_g, tps_u = steady_decode_tokens_per_s(
+            (sess, ungated), prompt, args.new_tokens)
+        report["gating"] = {
+            "routes": routes,
+            "cim_routed": sum(r["route"] == CIM_ROUTE
+                              for r in routes.values()),
+            "cim_routed_fraction": cim_fraction(routes),
+            "tokens_per_s_gated": tps_g,
+            "tokens_per_s_ungated": tps_u,
+        }
+    print(json.dumps(report, indent=1))
 
 
 if __name__ == "__main__":

@@ -2,19 +2,104 @@
 
 Every layer is an (init, apply) pair over plain dict pytrees so that
 sharding rules can match on parameter path names.
+
+`linear` is the single pluggable projection execution layer: every dense
+projection matmul in the model stack routes through it with a GEMM label,
+and a jit-static `KernelPlanTable` (repro.quant.plan_table) decides per
+label whether the projection lowers to the weight-stationary INT8 Pallas
+kernel or the standard XLA matmul — the What/When/Where verdicts applied
+as the deployed dataflow, not just telemetry.
 """
 from __future__ import annotations
 
+import contextlib
 import math
+import os
+import sys
+import threading
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from ..quant.int8 import dequantize_weight, planned_linear
+
 
 def dtype_of(name: str):
     return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
             "float16": jnp.float16}[name]
+
+
+# --- the planner-gated projection execution layer ---------------------------
+
+_ROUTE_TRACE = threading.local()    # .records, per-thread: concurrent
+                                    # sessions may trace simultaneously
+
+# route strings linear() records (serving/dryrun/bench key off these)
+CIM_ROUTE = "cim-int8-pallas"
+DEQUANT_ROUTE = "int8-dequant-xla"
+FLOAT_ROUTE = "xla"
+
+
+@contextlib.contextmanager
+def route_trace():
+    """Collect every `linear` routing decision made while tracing.
+
+    `linear` runs at Python trace time, so wrapping `jax.eval_shape` (or
+    any jit trace) of a model function yields the *executed* route per
+    projection label without any compute — this backs
+    `ServeSession.route_report`, the dry-run routing block, and the
+    label-coverage test.  Yields a list of
+    {"label", "route", "callsite"} records.
+    """
+    prev = getattr(_ROUTE_TRACE, "records", None)
+    _ROUTE_TRACE.records = []
+    try:
+        yield _ROUTE_TRACE.records
+    finally:
+        _ROUTE_TRACE.records = prev
+
+
+def _record_route(label: str, route: str) -> None:
+    records = getattr(_ROUTE_TRACE, "records", None)
+    if records is not None:
+        f = sys._getframe(2)        # the frame that called linear()
+        records.append({
+            "label": label, "route": route,
+            "callsite": f"{os.path.basename(f.f_code.co_filename)}"
+                        f":{f.f_lineno}"})
+
+
+def linear(w, x, label: str, plan=None, spec: str | None = None):
+    """y = x @ w — THE projection entry point, routed by the kernel plan.
+
+    w is either a float weight array or a quantized {"q", "scale"} leaf
+    (repro.quant.quantize_model_params).  With a KernelPlanTable `plan`,
+    a quantized 2-D projection whose label gates on lowers to the
+    weight-stationary INT8 Pallas kernel (planned_linear); everything
+    else dequantizes in x.dtype and runs the standard XLA contraction.
+    `spec` is an optional einsum spec for batched weights (MoE experts
+    `"ecd,edf->ecf"`, audio lm_head `"bld,ndv->blnv"`); the Pallas path
+    only applies to plain 2-D matmuls.
+
+    The plan lookup happens at trace time (plan is jit-static), so the
+    lowered program contains exactly one implementation per label — no
+    runtime branch, no retrace.  Unknown labels raise KeyError from the
+    plan table: model-side label drift must not silently disable gating.
+    """
+    quantized = isinstance(w, dict)
+    use_cim = bool(plan is not None and quantized and plan.use_cim(label))
+    if quantized:
+        if use_cim and spec is None and w["q"].ndim == 2:
+            _record_route(label, CIM_ROUTE)
+            return planned_linear(x, w["q"], w["scale"], use_cim_path=True)
+        _record_route(label, DEQUANT_ROUTE)
+        w = dequantize_weight(w["q"], w["scale"], x.dtype)
+    else:
+        _record_route(label, FLOAT_ROUTE)
+        if w.dtype != x.dtype:
+            w = w.astype(x.dtype)
+    return jnp.einsum(spec, x, w) if spec else x @ w
 
 
 # --- initializers -----------------------------------------------------------
@@ -73,9 +158,13 @@ def swiglu_init(key, d: int, d_ff: int, dtype):
             "w_down": dense_init(k3, d_ff, d, dtype)}
 
 
-def swiglu(params, x):
-    g = jax.nn.silu(x @ params["w_gate"])
-    return (g * (x @ params["w_up"])) @ params["w_down"]
+def swiglu(params, x, plan=None, label_prefix: str = "mlp"):
+    """Gated MLP; label_prefix distinguishes dense "mlp-*" from the MoE
+    "shared-*" expert (matching gemms_of_model labels)."""
+    g = jax.nn.silu(linear(params["w_gate"], x, f"{label_prefix}-gate",
+                           plan))
+    u = linear(params["w_up"], x, f"{label_prefix}-up", plan)
+    return linear(params["w_down"], g * u, f"{label_prefix}-down", plan)
 
 
 # --- attention projections ------------------------------------------------------
@@ -95,11 +184,10 @@ def attn_init(key, d: int, n_heads: int, n_kv: int, d_head: int, dtype,
     return p
 
 
-def qkv_proj(params, x, n_heads: int, n_kv: int, d_head: int):
+def qkv_proj(params, x, n_heads: int, n_kv: int, d_head: int, plan=None):
     b, s, _ = x.shape
-    q = x @ params["wq"]
-    k = x @ params["wk"]
-    v = x @ params["wv"]
+    q, k, v = (linear(params[w], x, lab, plan)
+               for w, lab in (("wq", "Wq"), ("wk", "Wk"), ("wv", "Wv")))
     if "bq" in params:
         q = q + params["bq"]
         k = k + params["bk"]
@@ -107,6 +195,13 @@ def qkv_proj(params, x, n_heads: int, n_kv: int, d_head: int):
     return (q.reshape(b, s, n_heads, d_head),
             k.reshape(b, s, n_kv, d_head),
             v.reshape(b, s, n_kv, d_head))
+
+
+def attn_out_proj(params, o, plan=None, label: str = "Wo"):
+    """Attention output projection (self-attn "Wo" / cross "xattn-out"),
+    shared by the full-sequence forward and the decode step so each label
+    has exactly one linear call site."""
+    return linear(params["wo"], o, label, plan)
 
 
 # --- misc -----------------------------------------------------------------------

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, SSMConfig
-from .layers import dense_init
+from .layers import dense_init, linear
 
 
 def segsum(x):
@@ -150,7 +150,7 @@ def _causal_conv(xBC, w, carry=None):
 
 
 def mamba_apply(params, x, cfg: ModelConfig, state=None, conv_carry=None,
-                decode: bool = False):
+                decode: bool = False, plan=None):
     """x: (b, l, d).  Train/prefill when decode=False (l = seq);
     decode=True expects l == 1 and a (state, conv_carry) cache.
     Returns (y, (new_state, new_conv_carry))."""
@@ -159,11 +159,12 @@ def mamba_apply(params, x, cfg: ModelConfig, state=None, conv_carry=None,
     di = s.d_inner(d)
     gdim = s.n_groups * s.d_state
     nh = s.n_ssm_heads(d)
-    z = x @ params["w_z"]
-    xs = x @ params["w_x"]
-    B = x @ params["w_B"]
-    C = x @ params["w_C"]
-    dt = x @ params["w_dt"]
+    z = linear(params["w_z"], x, "ssm-z", plan)
+    xs = linear(params["w_x"], x, "ssm-x", plan)
+    # B/C/dt are one fused GEMM in the planner's taxonomy ("ssm-BCdt"):
+    # three weights, one verdict, one call site
+    B, C, dt = (linear(params[w], x, "ssm-BCdt", plan)
+                for w in ("w_B", "w_C", "w_dt"))
     dt = jax.nn.softplus(dt.astype(jnp.float32)
                          + params["dt_bias"])              # (b, l, nh)
     A = -jnp.exp(params["A_log"])                          # (nh,)
@@ -200,7 +201,8 @@ def mamba_apply(params, x, cfg: ModelConfig, state=None, conv_carry=None,
                             + cfg.rmsnorm_eps)
     y = (yf * params["norm_scale"].astype(jnp.float32)).astype(x.dtype)
     y = y * jax.nn.silu(z)
-    return y @ params["out_proj"], (new_state, new_conv)
+    return linear(params["out_proj"], y, "ssm-out", plan), \
+        (new_state, new_conv)
 
 
 def mamba_cache_shapes(cfg: ModelConfig, batch: int):

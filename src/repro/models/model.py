@@ -29,8 +29,9 @@ import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
 from .attention import attend, decode_attend
-from .layers import (attn_init, apply_rope, dtype_of, embed_init,
-                     qkv_proj, rmsnorm, rmsnorm_init, swiglu, swiglu_init)
+from .layers import (attn_init, attn_out_proj, apply_rope, dtype_of,
+                     embed_init, linear, qkv_proj, rmsnorm, rmsnorm_init,
+                     swiglu, swiglu_init)
 from .mamba2 import (mamba_apply, mamba_cache_shapes, mamba_init)
 from .moe import moe_apply, moe_init
 
@@ -126,17 +127,35 @@ def init(key, cfg: ModelConfig):
 
 # --- forward (train / prefill) --------------------------------------------------
 
+def _cross_q_proj(sp, h, b, l, nh, dh, plan=None):
+    """Cross-attention query projection ("xattn-Q"), shared by the
+    full-sequence forward and the decode step."""
+    return linear(sp["attn"]["wq"], h, "xattn-Q", plan).reshape(
+        b, l, nh, dh)
+
+
+def _lm_logits(params, x, cfg: ModelConfig, plan=None):
+    """LM head ("lm_head"), shared by forward and decode.  Audio heads are
+    per-codebook (nb, d, vocab) and contract via einsum; tied embeddings
+    reuse the (float) embedding matrix transposed."""
+    spec = "bld,ndv->blnv" if cfg.family == "audio" else None
+    head = (params["embed"].T
+            if cfg.tie_embeddings and cfg.family != "audio"
+            else params["lm_head"])
+    return linear(head, x, "lm_head", plan, spec=spec)
+
+
 def _apply_mixer_full(slot: Slot, sp, x, cfg: ModelConfig, rc: RunConfig,
-                      image_kv=None, return_cache=False):
+                      image_kv=None, return_cache=False, plan=None):
     """Full-sequence mixer.  Returns (y, cache_entry_or_None)."""
     h = rmsnorm(sp["norm1"], x, cfg.rmsnorm_eps)
     if slot.mixer == "mamba":
-        y, (st, cv) = mamba_apply(sp["mamba"], h, cfg)
+        y, (st, cv) = mamba_apply(sp["mamba"], h, cfg, plan=plan)
         return y, ((st, cv) if return_cache else None)
     nh, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim()
     if slot.mixer == "cross":
         b, l, _ = x.shape
-        q = (h @ sp["attn"]["wq"]).reshape(b, l, nh, dh)
+        q = _cross_q_proj(sp, h, b, l, nh, dh, plan)
         kimg, vimg = image_kv
         # bidirectional attention onto image tokens (no mask)
         s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
@@ -145,9 +164,10 @@ def _apply_mixer_full(slot: Slot, sp, x, cfg: ModelConfig, rc: RunConfig,
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bhqk,bkhd->bqhd", p,
                        _expand(vimg, nh).astype(jnp.float32))
-        y = o.astype(x.dtype).reshape(b, l, nh * dh) @ sp["attn"]["wo"]
+        y = attn_out_proj(sp["attn"], o.astype(x.dtype).reshape(
+            b, l, nh * dh), plan, label="xattn-out")
         return y, ((kimg, vimg) if return_cache else None)
-    q, k, v = qkv_proj(sp["attn"], h, nh, kv, dh)
+    q, k, v = qkv_proj(sp["attn"], h, nh, kv, dh, plan)
     pos = jnp.arange(x.shape[1])[None, :]
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
@@ -175,7 +195,7 @@ def _apply_mixer_full(slot: Slot, sp, x, cfg: ModelConfig, rc: RunConfig,
                window=cfg.sliding_window, unroll=rc.scan_unroll > 0,
                block_causal=rc.block_causal, q_chunk=rc.attn_q_chunk)
     b, l, _ = x.shape
-    y = o.reshape(b, l, nh * dh) @ sp["attn"]["wo"]
+    y = attn_out_proj(sp["attn"], o.reshape(b, l, nh * dh), plan)
     return y, ((k, v) if return_cache else None)
 
 
@@ -184,13 +204,13 @@ def _expand(t, nh):
     return jnp.repeat(t, rep, axis=2) if rep > 1 else t
 
 
-def _apply_ffn(slot: Slot, sp, x, cfg: ModelConfig):
+def _apply_ffn(slot: Slot, sp, x, cfg: ModelConfig, plan=None):
     if slot.ffn is None:
         return x, 0.0
     h = rmsnorm(sp["norm2"], x, cfg.rmsnorm_eps)
     if slot.ffn == "dense":
-        return x + swiglu(sp["mlp"], h), 0.0
-    y, aux = moe_apply(sp["moe"], h, cfg)
+        return x + swiglu(sp["mlp"], h, plan), 0.0
+    y, aux = moe_apply(sp["moe"], h, cfg, plan)
     return x + y, aux
 
 
@@ -200,9 +220,11 @@ def _project_image(params, cfg, image_embeds):
 
 
 def forward(params, tokens, cfg: ModelConfig, rc: RunConfig,
-            image_embeds=None):
+            image_embeds=None, plan=None):
     """tokens: (b, l) int32, or (b, l, n_codebooks) for audio.
-    Returns logits (b, l, vocab) (audio: (b, l, nb, vocab))."""
+    Returns logits (b, l, vocab) (audio: (b, l, nb, vocab)).
+    `plan` (KernelPlanTable, jit-static) gates quantized projections —
+    prefill and decode share the same per-label verdicts."""
     slots = period_slots(cfg)
     if cfg.family == "audio":
         x = jnp.sum(jax.vmap(lambda e, t: e[t], in_axes=(0, 2),
@@ -227,14 +249,15 @@ def forward(params, tokens, cfg: ModelConfig, rc: RunConfig,
             if slot.mixer == "cross":
                 b, limg, _ = image_embeds.shape
                 kvh, dh = cfg.n_kv_heads, cfg.head_dim()
-                kimg = (image_embeds @ sp["attn"]["wk"]
-                        ).reshape(b, limg, kvh, dh)
-                vimg = (image_embeds @ sp["attn"]["wv"]
-                        ).reshape(b, limg, kvh, dh)
+                kimg, vimg = (
+                    linear(sp["attn"][w], image_embeds, "xattn-KV", plan
+                           ).reshape(b, limg, kvh, dh)
+                    for w in ("wk", "wv"))
                 ikv = (kimg, vimg)
-            y, _ = _apply_mixer_full(slot, sp, x, cfg, rc, image_kv=ikv)
+            y, _ = _apply_mixer_full(slot, sp, x, cfg, rc, image_kv=ikv,
+                                     plan=plan)
             x = _sp(x + y)
-            x, a = _apply_ffn(slot, sp, x, cfg)
+            x, a = _apply_ffn(slot, sp, x, cfg, plan)
             x = _sp(x)
             aux = aux + a
         return (x, aux), None
@@ -250,15 +273,7 @@ def forward(params, tokens, cfg: ModelConfig, rc: RunConfig,
                                unroll=max(1, min(rc.scan_unroll,
                                                  n_periods(cfg))))
     x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
-
-    if cfg.family == "audio":
-        logits = jnp.einsum("bld,ndv->blnv", x,
-                            params["lm_head"].astype(x.dtype))
-    else:
-        head = (params["embed"].T if cfg.tie_embeddings
-                else params["lm_head"]).astype(x.dtype)
-        logits = x @ head
-    return logits, aux
+    return _lm_logits(params, x, cfg, plan), aux
 
 
 def loss_fn(params, batch, cfg: ModelConfig, rc: RunConfig):
@@ -330,9 +345,11 @@ def _dequantize_kv(q, scale):
 # --- decode -----------------------------------------------------------------------
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
-                rc: RunConfig):
+                rc: RunConfig, plan=None):
     """One decode step.  tokens: (b, 1) (audio: (b, 1, nb)); pos: () int32
-    current length (uniform across batch).  Returns (logits, new_cache)."""
+    current length (uniform across batch).  Returns (logits, new_cache).
+    `plan` is the jit-static KernelPlanTable: gated projection labels
+    lower to the INT8 Pallas path inside the one compiled step."""
     slots = period_slots(cfg)
     b = tokens.shape[0]
     if cfg.family == "audio":
@@ -352,17 +369,18 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
             if slot.mixer == "mamba":
                 y, (st, cv) = mamba_apply(
                     sp["mamba"], h, cfg, state=cache_s["state"],
-                    conv_carry=cache_s["conv"], decode=True)
+                    conv_carry=cache_s["conv"], decode=True, plan=plan)
                 new_cache.append({"state": st, "conv": cv})
             elif slot.mixer == "cross":
-                q = (h @ sp["attn"]["wq"]).reshape(b, 1, nh, dh)
+                q = _cross_q_proj(sp, h, b, 1, nh, dh, plan)
                 o = decode_attend(
                     q, cache_s["k"], cache_s["v"],
                     jnp.full((b,), cache_s["k"].shape[1], jnp.int32))
-                y = o.reshape(b, 1, nh * dh) @ sp["attn"]["wo"]
+                y = attn_out_proj(sp["attn"], o.reshape(b, 1, nh * dh),
+                                  plan, label="xattn-out")
                 new_cache.append(cache_s)
             else:
-                q, k, v = qkv_proj(sp["attn"], h, nh, kvh, dh)
+                q, k, v = qkv_proj(sp["attn"], h, nh, kvh, dh, plan)
                 pvec = jnp.full((b, 1), pos, jnp.int32)
                 q = apply_rope(q, pvec, cfg.rope_theta)
                 k = apply_rope(k, pvec, cfg.rope_theta)
@@ -394,9 +412,10 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
                 o = decode_attend(q, kd, vd, lens,
                                   window=cfg.sliding_window,
                                   grouped=rc.gqa_einsum)
-                y = o.reshape(b, 1, nh * dh) @ sp["attn"]["wo"]
+                y = attn_out_proj(sp["attn"], o.reshape(b, 1, nh * dh),
+                                  plan)
             x = x + y
-            x, _ = _apply_ffn(slot, sp, x, cfg)
+            x, _ = _apply_ffn(slot, sp, x, cfg, plan)
         return x, new_cache
 
     # scan over periods, threading per-period cache slices
@@ -404,11 +423,4 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
         period_body, x, (params["slots"], cache),
         unroll=max(1, min(rc.scan_unroll, n_periods(cfg))))
     x = rmsnorm(params["final_norm"], x, cfg.rmsnorm_eps)
-    if cfg.family == "audio":
-        logits = jnp.einsum("bld,ndv->blnv", x,
-                            params["lm_head"].astype(x.dtype))
-    else:
-        head = (params["embed"].T if cfg.tie_embeddings
-                else params["lm_head"]).astype(x.dtype)
-        logits = x @ head
-    return logits, new_caches
+    return _lm_logits(params, x, cfg, plan), new_caches

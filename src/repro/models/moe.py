@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .layers import dense_init, swiglu, swiglu_init
+from .layers import dense_init, linear, swiglu, swiglu_init
 
 
 def moe_init(key, cfg: ModelConfig, dtype):
@@ -42,7 +42,7 @@ def capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)      # round up to 8
 
 
-def moe_apply(params, x, cfg: ModelConfig):
+def moe_apply(params, x, cfg: ModelConfig, plan=None):
     """x: (b, l, d) -> (y, aux_loss)."""
     m = cfg.moe
     b, l, d = x.shape
@@ -50,6 +50,8 @@ def moe_apply(params, x, cfg: ModelConfig):
     xt = x.reshape(T, d)
     C = capacity(cfg, T)
 
+    # router stays an f32 ungated matmul: it is not in the GEMM taxonomy
+    # (tiny, and routing stability dominates any kernel choice)
     logits = (xt @ params["router"]).astype(jnp.float32)     # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)    # (T, k)
@@ -71,10 +73,15 @@ def moe_apply(params, x, cfg: ModelConfig):
     contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
     buf = buf.at[flat_ids, safe_pos].add(contrib)
 
-    # batched expert SwiGLU
-    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"]))
-    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
-    eout = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+    # batched expert SwiGLU.  Expert weights are (E, d, f): the planner's
+    # verdict gates dequantization routing, but the batched-expert einsum
+    # has no 2-D weight-stationary form, so a gated expert label executes
+    # as an int8-dequant XLA contraction (recorded as such by route_trace)
+    g = jax.nn.silu(linear(params["w_gate"], buf, "expert-gate", plan,
+                           spec="ecd,edf->ecf"))
+    u = linear(params["w_up"], buf, "expert-up", plan, spec="ecd,edf->ecf")
+    eout = linear(params["w_down"], g * u, "expert-down", plan,
+                  spec="ecf,efd->ecd")
 
     # gather back with routing weights
     back = eout[flat_ids, safe_pos]                          # (T*k, d)
@@ -83,7 +90,7 @@ def moe_apply(params, x, cfg: ModelConfig):
     y = yt.reshape(b, l, d)
 
     if m.n_shared_experts:
-        y = y + swiglu(params["shared"], x)
+        y = y + swiglu(params["shared"], x, plan, label_prefix="shared")
 
     # load-balancing aux loss (Switch-style)
     frac_tokens = jnp.mean(

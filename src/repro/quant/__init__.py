@@ -1,6 +1,11 @@
-"""INT8 quantization (paper's evaluation precision) + planner-gated linear."""
-from .int8 import (dequantize_weight, planned_linear, quantization_error,
+"""INT8 quantization (paper's evaluation precision) + planner-gated linear
++ the jit-static KernelPlanTable routing verdicts into the model stack."""
+from .int8 import (PROJECTION_WEIGHT_NAMES, dequantize_weight,
+                   planned_linear, quantization_error, quantize_model_params,
                    quantize_tree, quantize_weight)
+from .plan_table import KernelPlanTable, PlanEntry, strip_model_prefix
 
 __all__ = ["quantize_weight", "dequantize_weight", "quantize_tree",
-           "planned_linear", "quantization_error"]
+           "quantize_model_params", "planned_linear", "quantization_error",
+           "PROJECTION_WEIGHT_NAMES", "KernelPlanTable", "PlanEntry",
+           "strip_model_prefix"]

@@ -21,8 +21,11 @@ def quantize_weight(w):
     return q, scale.astype(jnp.float32)
 
 
-def dequantize_weight(q, scale):
-    return q.astype(jnp.float32) * scale[None, :]
+def dequantize_weight(q, scale, dtype=jnp.float32):
+    """Per-output-channel dequant in `dtype` (the canonical expression —
+    every dequant site routes here).  Supports stacked leading axes:
+    q (..., K, N) with scale (..., N)."""
+    return q.astype(dtype) * scale.astype(dtype)[..., None, :]
 
 
 def quantize_tree(params, min_size: int = 1 << 16):
@@ -44,6 +47,11 @@ def planned_linear(x, w_q, w_scale, use_cim_path: bool,
     use_cim_path=True  -> weight-stationary INT8 Pallas kernel
     use_cim_path=False -> plain XLA matmul on the dequantized weights
     (the paper: never deploy CiM for M=1 / low-reuse GEMMs).
+
+    Both branches respect x.dtype: bfloat16 decode activations dequantize
+    the weight straight to bfloat16 (no float32 weight materialization)
+    and return bfloat16; the Pallas kernel accumulates in f32 internally
+    and casts its output back.
     """
     if use_cim_path:
         from ..kernels import ops
@@ -51,8 +59,48 @@ def planned_linear(x, w_q, w_scale, use_cim_path: bool,
         x2 = x.reshape(-1, x.shape[-1])
         y = ops.int8_matmul(x2, w_q, w_scale, interpret=interpret)
         return y.reshape(*b_shape, w_q.shape[1]).astype(x.dtype)
-    w = dequantize_weight(w_q, w_scale).astype(x.dtype)
-    return x @ w
+    return x @ dequantize_weight(w_q, w_scale, x.dtype)
+
+
+# weight-leaf names the runtime gate can quantize: every projection that
+# `core.llm_workloads.gemms_of_model` emits a label for.  Norm scales,
+# biases, convs, router (kept f32 for routing stability) and the embedding
+# gather stay in float.
+PROJECTION_WEIGHT_NAMES = frozenset({
+    "wq", "wk", "wv", "wo",                      # attention projections
+    "w_gate", "w_up", "w_down",                  # dense MLP / MoE experts
+    "w_z", "w_x", "w_B", "w_C", "w_dt",          # mamba in-projections
+    "out_proj",                                  # mamba out-projection
+    "lm_head",
+})
+
+
+def quantize_model_params(params):
+    """INT8-quantize every projection weight of a model param tree.
+
+    Unlike size-threshold `quantize_tree`, this walks by *name*: the leaf
+    names in PROJECTION_WEIGHT_NAMES are exactly the weights the planner
+    has verdicts for.  Stacked (scanned) leaves keep their leading layer /
+    expert axes — quantization vmaps over them, so per-(layer, channel)
+    scales survive `unstack_tree` inside the decode scan.  Each quantized
+    leaf becomes a {"q": int8, "scale": f32} sub-tree (pytree-transparent:
+    scan/unstack slice q and scale together).
+    """
+    from jax.tree_util import DictKey, tree_map_with_path
+
+    def q(path, leaf):
+        name = next((p.key for p in reversed(path)
+                     if isinstance(p, DictKey)), None)
+        if name not in PROJECTION_WEIGHT_NAMES or getattr(
+                leaf, "ndim", 0) < 2:
+            return leaf
+        fn = quantize_weight
+        for _ in range(leaf.ndim - 2):      # (layers, [experts,] K, N)
+            fn = jax.vmap(fn)
+        qw, scale = fn(leaf)
+        return {"q": qw, "scale": scale}
+
+    return tree_map_with_path(q, params)
 
 
 def quantization_error(w, rtol_target: float = 0.02) -> float:

@@ -1,4 +1,6 @@
-"""Serving: prefill + batched KV-cache decode."""
-from .engine import ServeSession, make_prefill, make_serve_step
+"""Serving: prefill + batched KV-cache decode, planner-gated execution."""
+from .engine import (CIM_ROUTE, ServeSession, cim_fraction, decode_routes,
+                     make_prefill, make_serve_step)
 
-__all__ = ["ServeSession", "make_prefill", "make_serve_step"]
+__all__ = ["ServeSession", "make_prefill", "make_serve_step",
+           "decode_routes", "cim_fraction", "CIM_ROUTE"]

@@ -8,10 +8,16 @@ and prefill-vs-full-forward consistency (tested).
 Kernel gating: `ServeSession.kernel_plan` runs the What/When/Where
 planner (batched sweep backend — repro.core.sweep, one fused device call,
 LRU-cached so every session serving the same model shape reuses the
-verdicts) over this session's decode GEMMs; `use_cim_for(label)` is the
-per-GEMM gate consulted when routing a projection through the
-weight-stationary INT8 path (repro.quant.planned_linear) vs the standard
-XLA matmul — the paper's "when NOT to CiM" answer, enforced at runtime.
+verdicts) over this session's decode GEMMs.  With `quantize=True` the
+verdicts become the execution policy: the plan is built *before* jitting,
+frozen into a jit-static `KernelPlanTable`, and the jitted decode step
+closes over it — gated projection labels lower to the weight-stationary
+INT8 Pallas kernel (repro.quant.planned_linear), ungated ones to the
+standard XLA matmul, all inside ONE compiled executable (prefill runs the
+same per-token step, so prefill and decode share the gate and nothing
+retraces after the first step).  `use_cim_for(label)` exposes the
+per-GEMM gate; `route_report()` traces the step abstractly and reports
+the route each label actually lowered to.
 """
 from __future__ import annotations
 
@@ -23,52 +29,116 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
-from ..models import decode_step, forward, init_cache
+from ..models import decode_step, forward, init, init_cache
+from ..models.layers import CIM_ROUTE, route_trace
+from ..quant import (KernelPlanTable, quantize_model_params,
+                     strip_model_prefix)
 
 
-def make_serve_step(cfg: ModelConfig, rc: RunConfig) -> Callable:
+def make_serve_step(cfg: ModelConfig, rc: RunConfig,
+                    plan: KernelPlanTable | None = None) -> Callable:
     """(params, cache, tokens, pos) -> (logits, cache) — one decode step.
 
     This is exactly the fn the dry-run lowers for decode shapes: one new
-    token against a seq_len-deep KV cache.
+    token against a seq_len-deep KV cache.  `plan` (jit-static) gates
+    quantized projections through the INT8 Pallas path per label.
     """
     def step(params, cache, tokens, pos):
-        return decode_step(params, cache, tokens, pos, cfg, rc)
+        return decode_step(params, cache, tokens, pos, cfg, rc, plan=plan)
     return step
 
 
-def make_prefill(cfg: ModelConfig, rc: RunConfig) -> Callable:
+def make_prefill(cfg: ModelConfig, rc: RunConfig,
+                 plan: KernelPlanTable | None = None) -> Callable:
     """(params, tokens[, image_embeds]) -> logits — the prefill forward.
 
     Fills no cache inline (cache writes for prefill re-run the per-token
     decode path in `prefill_into_cache`); used for the prefill_32k shape
-    where only the forward matters for lowering."""
+    where only the forward matters for lowering.  Shares `plan` with the
+    decode step: one gate for both phases."""
     def run(params, tokens, image_embeds=None):
         logits, _ = forward(params, tokens, cfg, rc,
-                            image_embeds=image_embeds)
+                            image_embeds=image_embeds, plan=plan)
         return logits
     return run
 
 
+def cim_fraction(routes: dict) -> float:
+    """Fraction of traced projection routes that lowered to the CiM
+    INT8 Pallas path (shared by the serve CLI, the dry-run decode cells
+    and the gating benchmark — one definition, three surfaces)."""
+    vals = [r["route"] if isinstance(r, dict) else r
+            for r in routes.values()]
+    return sum(v == CIM_ROUTE for v in vals) / max(1, len(vals))
+
+
+def _token_struct(cfg: ModelConfig, batch: int):
+    shape = (batch, 1) + ((cfg.audio.n_codebooks,)
+                          if cfg.family == "audio" else ())
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def decode_routes(cfg: ModelConfig, rc: RunConfig, plan: KernelPlanTable,
+                  batch: int, max_len: int,
+                  n_image_tokens: int = 0) -> dict:
+    """label -> executed route of the plan-gated decode step.
+
+    Builds quantized params and cache *abstractly* (jax.eval_shape — no
+    allocation, works for full production configs) and traces the step
+    under `route_trace`; the result is exactly what the jitted program
+    lowers, per projection label.  Used by the dry-run decode cells."""
+    step = make_serve_step(cfg, rc, plan)
+
+    def run(key):
+        params = quantize_model_params(init(key, cfg))
+        cache = init_cache(cfg, rc, batch, max_len,
+                          n_image_tokens=n_image_tokens)
+        tok = jnp.zeros(_token_struct(cfg, batch).shape, jnp.int32)
+        return step(params, cache, tok, jnp.int32(0))
+
+    with route_trace() as records:
+        jax.eval_shape(run, jax.random.PRNGKey(0))
+    return {r["label"]: r["route"] for r in records}
+
+
 @dataclasses.dataclass
 class ServeSession:
-    """Minimal batched serving session (greedy or temperature sampling)."""
+    """Minimal batched serving session (greedy or temperature sampling).
+
+    quantize=True turns the planner verdicts into the execution policy:
+    projection weights are INT8-quantized at init, the kernel plan is
+    built eagerly (before jitting), and the jitted decode step closes
+    over the static KernelPlanTable.  gated=False keeps the quantized
+    weights but forces every label onto the standard path — the parity
+    baseline for the gated program (identical numerics source, routing
+    the only difference)."""
     cfg: ModelConfig
     rc: RunConfig
     params: Any
     max_len: int
     batch: int
     n_image_tokens: int = 0
+    quantize: bool = False
+    gated: bool = True
 
     def __post_init__(self):
         self.cache = init_cache(self.cfg, self.rc, self.batch,
                                 self.max_len,
                                 n_image_tokens=self.n_image_tokens)
         self.pos = 0
-        self._step = jax.jit(make_serve_step(self.cfg, self.rc))
         self._kernel_plan = None
         self._plan_cache_telemetry = None
         self._plan_lock = threading.Lock()
+        self._verdict_table = None
+        self.plan_table = None
+        if self.quantize:
+            # plan BEFORE jit: the verdicts are static inputs of the one
+            # lowered decode program, not runtime state
+            table = self.verdict_table
+            self.plan_table = table if self.gated else table.ungated()
+            self.params = quantize_model_params(self.params)
+        self._step = jax.jit(make_serve_step(self.cfg, self.rc,
+                                             self.plan_table))
 
     @property
     def kernel_plan(self) -> dict:
@@ -108,11 +178,60 @@ class ServeSession:
         _ = self.kernel_plan
         return self._plan_cache_telemetry
 
+    @property
+    def verdict_table(self) -> KernelPlanTable:
+        """This session's raw verdicts as a KernelPlanTable (short
+        labels).  Unlike `plan_table` it is never force-ungated, and it
+        exists for non-quantized sessions too (lazy plan build)."""
+        if self._verdict_table is None:
+            self._verdict_table = KernelPlanTable.from_decisions(
+                self.kernel_plan.values(), model_name=self.cfg.name)
+        return self._verdict_table
+
     def use_cim_for(self, label: str) -> bool:
         """The planner's "when" gate for one GEMM of this session (feeds
-        repro.quant.planned_linear's use_cim_path)."""
-        d = self.kernel_plan.get(label)
-        return bool(d.use_cim) if d is not None else False
+        repro.quant.planned_linear's use_cim_path).  Accepts full
+        ("<model> Wq") or short ("Wq") labels; unknown labels raise
+        KeyError with the known-label list (the KernelPlanTable
+        contract) — model-side label drift must not silently disable
+        gating."""
+        return self.verdict_table.use_cim(
+            strip_model_prefix(label, self.cfg.name))
+
+    def route_report(self) -> dict:
+        """label -> {route, use_cim, what, where} as actually lowered by
+        this session's jitted decode step (abstract trace, no compute)."""
+        step = make_serve_step(self.cfg, self.rc, self.plan_table)
+        with route_trace() as records:
+            jax.eval_shape(step, self.params, self.cache,
+                           _token_struct(self.cfg, self.batch),
+                           jax.ShapeDtypeStruct((), jnp.int32))
+        report = {}
+        for r in records:
+            entry = (self.plan_table.entry(r["label"])
+                     if self.plan_table is not None else None)
+            report[r["label"]] = {
+                "route": r["route"],
+                "use_cim": entry.use_cim if entry else False,
+                "what": entry.what if entry else "baseline",
+                "where": entry.where if entry else "PE"}
+        return report
+
+    @property
+    def decode_executables(self) -> int | None:
+        """How many programs the jitted decode step compiled (the
+        no-retrace gate expects exactly 1 after any amount of traffic).
+        None when the private jax jit-cache probe is unavailable."""
+        probe = getattr(self._step, "_cache_size", None)
+        return probe() if probe is not None else None
+
+    def reset(self) -> None:
+        """Clear the KV cache and position for a fresh request; the
+        compiled decode step (and its plan gate) is reused as-is."""
+        self.cache = init_cache(self.cfg, self.rc, self.batch,
+                                self.max_len,
+                                n_image_tokens=self.n_image_tokens)
+        self.pos = 0
 
     def prefill(self, tokens):
         """Feed a prompt token-by-token through the decode path (keeps a

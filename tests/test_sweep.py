@@ -446,7 +446,9 @@ def test_serving_kernel_plan_gates_decode_gemvs():
     assert gemvs
     for lab in gemvs:
         assert s.use_cim_for(lab) == plan[lab].use_cim
-    assert not s.use_cim_for("no-such-gemm")
+    # unknown labels raise (label drift must not silently disable gating)
+    with pytest.raises(KeyError):
+        s.use_cim_for("no-such-gemm")
     # cache telemetry: one plan build = one hit-or-miss per (gemm, config)
     # option plus one per baseline, recorded for traffic-driven sizing
     tel = s.plan_cache_telemetry
