@@ -10,17 +10,25 @@ large M, K within reduction reach) run the weight-stationary INT8 Pallas
 path; memory-bound M=1 decode GEMMs stay on the standard path (the paper's
 "when NOT to CiM" takeaway).
 
-Backends (`decide` / `plan_workload` accept backend="vectorized"|"scalar"):
+Backends (`decide` / `plan_workload` accept
+backend="vectorized"|"pallas"|"scalar"):
   * "vectorized" (default): the batched sweep engine (repro.core.sweep) —
     all GEMMs x configs x candidate mappings scored in one fused jax.jit
     call through vectorized.evaluate_flat, with an LRU result cache keyed
-    by (GEMM, config, order_mode).  Both order modes ("exact" and
-    "greedy") run fully batched — the greedy smallest-factor-outermost
-    DRAM order is selected per row in-kernel, so there is no scalar
-    fallback on any path.
+    by (backend, GEMM, config, order_mode).  Both order modes ("exact"
+    and "greedy") run fully batched — the greedy smallest-factor-
+    outermost DRAM order is selected per row in-kernel, so there is no
+    scalar fallback on any path.
+  * "pallas": the same batched sweep, but the CiM rows run through the
+    fused hand-written Pallas kernel (repro.kernels.sweep_eval) instead
+    of relying on XLA fusion.  Identical verdicts by construction (both
+    kernels consume vectorized.py's backend-shared cost spec); platforms
+    without Pallas lowering fall back to the XLA kernel with the reason
+    recorded in sweep cache telemetry.
   * "scalar": the original per-call Python cost model — kept as the
-    reference for parity testing (tests/test_sweep.py).
-Both backends apply the identical eligibility and "when" rules
+    reference for parity testing (tests/test_sweep.py and the
+    property-based differential suite in tests/test_sweep_properties.py).
+All backends apply the identical eligibility and "when" rules
 (`make_decision`), so verdicts can only differ by float tolerance.
 """
 from __future__ import annotations
@@ -39,12 +47,15 @@ from .primitives import (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T,
 DEFAULT_PRIMS = (ANALOG_6T, ANALOG_8T, DIGITAL_6T, DIGITAL_8T)
 
 
+PLANNER_BACKENDS = ("vectorized", "pallas", "scalar")
+
+
 def _check_args(backend: str, order_mode: str) -> None:
-    """Shared argument validation: both backends accept exactly the same
+    """Shared argument validation: every backend accepts exactly the same
     (backend, order_mode) combinations — no mode silently reroutes."""
-    if backend not in ("vectorized", "scalar"):
+    if backend not in PLANNER_BACKENDS:
         raise ValueError(f"unknown planner backend {backend!r}; "
-                         "expected 'vectorized' or 'scalar'")
+                         f"expected one of {PLANNER_BACKENDS}")
     check_order_mode(order_mode)
 
 
@@ -123,13 +134,15 @@ def decide(gemm: GEMM, configs: dict[str, CiMSystemConfig] | None = None,
     """What/when/where for one GEMM.
 
     backend="vectorized" routes through the batched sweep engine (cached,
-    one fused device call, both order modes in-kernel);
+    one fused device call, both order modes in-kernel); backend="pallas"
+    is the same sweep with the fused Pallas row kernel;
     backend="scalar" is the Python reference."""
     _check_args(backend, order_mode)
     configs = configs or standard_configs()
-    if backend == "vectorized":
+    if backend != "scalar":
         from .sweep import decide_batched
-        return decide_batched(gemm, configs, order_mode, throughput_floor)
+        return decide_batched(gemm, configs, order_mode, throughput_floor,
+                              backend=backend)
     base = evaluate_baseline(gemm)
     options = {name: evaluate(gemm, cfg, order_mode)
                for name, cfg in configs.items()}
@@ -145,11 +158,13 @@ def plan_workload(gemms: Iterable[GEMM],
     The default vectorized backend flattens the entire workload into one
     batched evaluation (plus one for the baselines) instead of looping
     decide() — 10x+ faster on full llm_workloads sweeps (see
-    benchmarks/sweep_bench.py) — in either order mode."""
+    benchmarks/sweep_bench.py) — in either order mode; backend="pallas"
+    runs the same sweep through the fused Pallas row kernel."""
     _check_args(backend, order_mode)
-    if backend == "vectorized":
+    if backend != "scalar":
         from .sweep import plan_workload_batched
-        return plan_workload_batched(gemms, configs, order_mode)
+        return plan_workload_batched(gemms, configs, order_mode,
+                                     backend=backend)
     return [decide(g, configs, order_mode, backend=backend)
             for g in gemms]
 

@@ -24,6 +24,15 @@ all 6 DRAM orders, "greedy" keeps each row's smallest-factor-outermost
 order, also selected in-kernel (vectorized.evaluate_flat) — there is no
 scalar fallback on any planner path.
 
+Two CiM row kernels score those batches: the default XLA-fused path
+(vectorized.evaluate_flat) and backend="pallas", a fused hand-written
+kernel (repro.kernels.sweep_eval) consuming the same backend-shared cost
+spec.  Pallas results live in their own result-cache keyspace, so parity
+suites exercise the kernel rather than the LRU; on platforms whose
+Pallas lowering is unavailable the engine transparently falls back to
+the XLA kernel and records the reason in `cache_info()["pallas_fallback"]`
+(which also carries a per-backend hit/miss breakdown).
+
 Multi-device scaling: an engine given a 1-D row mesh (launch.mesh.row_mesh)
 shards every flattened row batch across the mesh devices with `shard_map`
 — each row is independent, so `exhaustive_best`-scale grids (tens of
@@ -57,26 +66,40 @@ from .vectorized import (BASE_TILE_FIELDS, MAP_FIELDS, config_row,
 _OUT_KEYS = ("energy_pj", "time_ns", "compute_ns", "dram_ns", "smem_ns",
              "utilization", "dram_bytes", "smem_bytes", "valid")
 
+# The result-cache/counter buckets a CiM query can resolve to, plus the
+# baseline keyspace — cache_info()'s per-backend breakdown reports these.
+CIM_BACKENDS = ("vectorized", "pallas")
+
 # --- compiled-kernel registry ------------------------------------------------
-# Every jitted sweep entry point — (kind, order_mode, mesh) — lives here,
-# so jit_cache_clear() can drop *all* compiled executables: a "cold-jit"
-# benchmark stays honest no matter which greedy/sharded variants earlier
-# code in the process already traced.
+# Every jitted sweep entry point — (kind, order_mode, mesh, kernel) —
+# lives here, so jit_cache_clear() can drop *all* compiled executables: a
+# "cold-jit" benchmark stays honest no matter which greedy/sharded/pallas
+# variants earlier code in the process already traced.
 _KERNEL_LOCK = threading.Lock()
 _KERNELS: dict = {}
 
 
-def _jit_kernel(kind: str, order_mode: str = "exact", mesh=None):
+def _jit_kernel(kind: str, order_mode: str = "exact", mesh=None,
+                kernel: str = "xla"):
     """Jitted evaluator for `kind` ("cim" | "base"), memoized per
-    (order_mode, mesh).  mesh=None is the single-device fast path; a 1-D
-    row mesh wraps the kernel in shard_map over its row axis (rows are
+    (order_mode, mesh, kernel).  kernel="xla" scores CiM rows through
+    vectorized.evaluate_flat (XLA fusion of the 6-order unroll);
+    kernel="pallas" through the fused hand-written kernel
+    (repro.kernels.sweep_eval — same backend-shared cost spec, one
+    pallas_call).  mesh=None is the single-device fast path; a 1-D row
+    mesh wraps either kernel in shard_map over its row axis (rows are
     independent, so sharding is a pure data split — results are bitwise
     identical to the unsharded kernel)."""
-    key = (kind, order_mode, mesh)
+    key = (kind, order_mode, mesh, kernel)
     with _KERNEL_LOCK:
         fn = _KERNELS.get(key)
         if fn is None:
-            if kind == "cim":
+            if kind == "cim" and kernel == "pallas":
+                from ..kernels.sweep_eval import sweep_eval
+
+                def base(batch, _om=order_mode):
+                    return sweep_eval(batch, order_mode=_om)
+            elif kind == "cim":
                 def base(batch, _om=order_mode):
                     return evaluate_flat(batch, order_mode=_om)
             else:
@@ -85,9 +108,13 @@ def _jit_kernel(kind: str, order_mode: str = "exact", mesh=None):
                 from jax.experimental.shard_map import shard_map
                 from jax.sharding import PartitionSpec
                 axis = mesh.axis_names[0]
+                # pallas_call has no shard_map replication rule; rows are
+                # a pure data split (no cross-shard collectives), so
+                # skipping the replication check is sound
                 base = shard_map(base, mesh=mesh,
                                  in_specs=(PartitionSpec(axis),),
-                                 out_specs=PartitionSpec(axis))
+                                 out_specs=PartitionSpec(axis),
+                                 check_rep=(kernel != "pallas"))
             fn = jax.jit(base)
             _KERNELS[key] = fn
     return fn
@@ -166,6 +193,11 @@ class SweepEngine:
         self._local = threading.local()   # per-thread hit/miss counters
         self.hits = 0
         self.misses = 0
+        # per-backend keyspace breakdown ("vectorized" / "pallas" /
+        # "baseline") + the recorded reason if a pallas request ever fell
+        # back to the XLA kernel on this engine
+        self._backend_counts: dict = {}
+        self._pallas_fallback: str | None = None
 
     @property
     def mesh(self):
@@ -180,14 +212,18 @@ class SweepEngine:
         return self.mesh.size if self.mesh is not None else 1
 
     # --- cache plumbing ---------------------------------------------------
-    def _get(self, key):
+    def _get(self, key, bucket: str):
         with self._lock:
+            counts = self._backend_counts.setdefault(
+                bucket, {"hits": 0, "misses": 0})
             if key in self._cache:
                 self._cache.move_to_end(key)
                 self.hits += 1
+                counts["hits"] += 1
                 self._local.hits = getattr(self._local, "hits", 0) + 1
                 return self._cache[key]
             self.misses += 1
+            counts["misses"] += 1
             self._local.misses = getattr(self._local, "misses", 0) + 1
             return None
 
@@ -207,30 +243,68 @@ class SweepEngine:
                 self._cache.popitem(last=False)
 
     def cache_info(self) -> dict:
+        """Size + hit/miss totals, the per-backend breakdown (which
+        keyspace — vectorized / pallas / baseline — each lookup resolved
+        to), and `pallas_fallback`: None normally, the recorded lowering
+        error if a backend="pallas" request ever fell back to the XLA
+        kernel on this engine (surfaced by serve/dryrun telemetry)."""
         with self._lock:
             return {"size": len(self._cache), "max_size": self.cache_size,
-                    "hits": self.hits, "misses": self.misses}
+                    "hits": self.hits, "misses": self.misses,
+                    "backends": {b: dict(c) for b, c in
+                                 self._backend_counts.items()},
+                    "pallas_fallback": self._pallas_fallback}
 
     def cache_clear(self) -> None:
+        # _pallas_fallback survives on purpose: it records a platform
+        # property of this process, not cache state
         with self._lock:
             self._cache.clear()
             self.hits = self.misses = 0
+            self._backend_counts = {}
 
     # --- CiM options ------------------------------------------------------
+    def _resolve_cim_backend(self, backend: str) -> tuple[str, str]:
+        """(kernel, bucket) for a CiM query: `kernel` in {"xla","pallas"}
+        picks the jitted entry point, `bucket` names the result-cache
+        keyspace (and per-backend counters).  A "pallas" request on a
+        platform whose Pallas lowering is unavailable falls back to the
+        XLA kernel — and to the shared "vectorized" keyspace, since the
+        results are then literally the vectorized backend's — recording
+        the reason for cache_info()/telemetry."""
+        if backend not in CIM_BACKENDS:
+            raise ValueError(f"unknown sweep backend {backend!r}; "
+                             f"expected one of {CIM_BACKENDS}")
+        if backend == "pallas":
+            from ..kernels.sweep_eval import pallas_status
+            status = pallas_status()
+            if status["mode"] == "unavailable":
+                with self._lock:
+                    self._pallas_fallback = status["reason"]
+                return "xla", "vectorized"
+            return "pallas", "pallas"
+        return "xla", "vectorized"
+
     def cim_metrics(self, pairs: Sequence[tuple[GEMM, CiMSystemConfig]],
-                    order_mode: str = "exact") -> list[Metrics]:
+                    order_mode: str = "exact",
+                    backend: str = "vectorized") -> list[Metrics]:
         """Metrics for each (GEMM, config) pair: the min-energy candidate
         mapping, scored on-device (== cost_model.evaluate).  Both order
         modes run in-kernel — "exact" takes the min over all 6 DRAM
         orders, "greedy" selects each row's smallest-factor-outermost
-        order (no scalar fallback)."""
+        order (no scalar fallback).  backend="pallas" routes the batch
+        through the fused Pallas kernel (distinct result-cache keyspace,
+        so backend parity tests measure the kernel, not the LRU); when
+        its lowering is unavailable the query falls back to the XLA
+        kernel with the reason recorded in cache_info()."""
         check_order_mode(order_mode)
-        keys = [("cim", _gemm_key(g), _cfg_key(c), order_mode)
+        kernel, bucket = self._resolve_cim_backend(backend)
+        keys = [("cim", bucket, _gemm_key(g), _cfg_key(c), order_mode)
                 for g, c in pairs]
         results: dict = {}
         todo: OrderedDict = OrderedDict()      # key -> (gemm, cfg)
         for key, (g, c) in zip(keys, pairs):
-            hit = self._get(key)
+            hit = self._get(key, bucket)
             if hit is not None:
                 results[key] = hit
             else:
@@ -249,7 +323,7 @@ class SweepEngine:
                 slices.append((key, g, c, maps, start, start + len(maps)))
             batch = {f: np.asarray([r[f] for r in flat], np.float32)
                      for f in flat[0]}
-            fn = _jit_kernel("cim", order_mode, self.mesh)
+            fn = _jit_kernel("cim", order_mode, self.mesh, kernel)
             out = _run_padded(fn, batch, len(flat), self.n_shards)
             for key, g, c, maps, lo, hi in slices:
                 e = out["energy_pj"][lo:hi]
@@ -273,7 +347,7 @@ class SweepEngine:
         results: dict = {}
         todo: OrderedDict = OrderedDict()
         for key, g in zip(keys, gemms):
-            hit = self._get(key)
+            hit = self._get(key, "baseline")
             if hit is not None:
                 results[key] = hit
             else:
@@ -331,9 +405,9 @@ def cache_clear() -> None:
 
 def jit_cache_clear() -> None:
     """Drop the compiled executables of EVERY jitted sweep kernel — all
-    (kind, order_mode, mesh) entry points in the registry, so greedy and
-    sharded variants go cold too (the LRU *result* cache is untouched —
-    use `cache_clear` for that).
+    (kind, order_mode, mesh, kernel) entry points in the registry, so
+    greedy, sharded and pallas variants go cold too (the LRU *result*
+    cache is untouched — use `cache_clear` for that).
 
     Benchmarks call this before a cold-jit measurement so the number is
     honest even when earlier code in the same process already traced the
@@ -396,12 +470,18 @@ def plan_workload_batched(gemms: Iterable[GEMM],
                           configs: dict[str, CiMSystemConfig] | None = None,
                           order_mode: str = "exact",
                           throughput_floor: float = 0.5,
-                          engine: SweepEngine | None = None):
+                          engine: SweepEngine | None = None,
+                          backend: str = "vectorized"):
     """Batched planner.plan_workload: one device sweep, scalar verdicts.
 
     Evaluates all GEMMs x all configs x all candidate mappings in one
     fused call per kind (CiM / baseline), then applies exactly the same
-    eligibility + "when" rules as planner.decide.
+    eligibility + "when" rules as planner.decide.  backend selects the
+    CiM row kernel ("vectorized" = XLA-fused evaluate_flat, "pallas" =
+    the fused hand-written kernel); the tensor-core baseline sweep always
+    runs on the XLA kernel — its 36-permutation search is outside the
+    Pallas tentpole and shared by both backends, so verdicts can only
+    differ through the CiM rows.
     """
     from .planner import make_decision, standard_configs
     engine = engine or _ENGINE
@@ -410,7 +490,7 @@ def plan_workload_batched(gemms: Iterable[GEMM],
     names = list(configs)
     bases = engine.baseline_metrics(gemms)
     pairs = [(g, configs[name]) for g in gemms for name in names]
-    mets = engine.cim_metrics(pairs, order_mode)
+    mets = engine.cim_metrics(pairs, order_mode, backend)
     decisions = []
     for i, g in enumerate(gemms):
         opts = {name: mets[i * len(names) + j]
@@ -423,6 +503,7 @@ def decide_batched(gemm: GEMM,
                    configs: dict[str, CiMSystemConfig] | None = None,
                    order_mode: str = "exact",
                    throughput_floor: float = 0.5,
-                   engine: SweepEngine | None = None):
+                   engine: SweepEngine | None = None,
+                   backend: str = "vectorized"):
     return plan_workload_batched([gemm], configs, order_mode,
-                                 throughput_floor, engine)[0]
+                                 throughput_floor, engine, backend)[0]

@@ -74,6 +74,13 @@ def config_row(cfg: CiMSystemConfig) -> dict:
     }
 
 
+def _accesses(n_bytes, level):
+    """Whole accesses for a byte stream at a memory level — the batched
+    equivalent of MemoryLevel.energy_pj's ceil (charging fractional
+    accesses under-counts by up to 8x on byte-scale degenerate GEMMs)."""
+    return jnp.ceil(n_bytes / level.access_granularity_bytes)
+
+
 def _revisit_seq(pairs, tensor: str):
     """Vectorized loopnest.revisit_factor over an explicit innermost-first
     sequence of (dim, trips-array) pairs.
@@ -137,50 +144,44 @@ def _greedy_mask(trips: dict, order: tuple):
     return precedes(d0, d1) & precedes(d1, d2)
 
 
-def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
-                  order_mode: str = "exact"):
-    """Evaluate B flattened (GEMM, config, mapping) rows at once.
+# --- backend-shared CiM cost spec -------------------------------------------
+# ONE description of the cost model, consumed by BOTH sweep backends: the
+# XLA path (`evaluate_flat` below) and the fused Pallas kernel
+# (repro.kernels.sweep_eval) call exactly these functions on their own
+# array layouts — (B,) columns under XLA, (1, block) row slices of the
+# stacked field matrix inside the Pallas kernel.  Any change to the cost
+# equations lands in both backends at once, which is what lets the
+# differential-testing harness (tests/test_sweep_properties.py) pin the
+# backends to each other instead of to two hand-maintained copies.
 
-    batch: dict of (B,) arrays for every name in FLAT_FIELDS.  Rows may
-    mix different GEMMs, primitives, and CiM levels (RF vs SMEM — the two
-    traffic models are computed branch-free and selected per row).
 
-    order_mode (static under jit): "exact" keeps the min-energy DRAM loop
-    order of all 6 permutations (cost_model's exact mode); "greedy" keeps
-    each row's smallest-factor-outermost order — the per-row permutation
-    is computed in-kernel from the (m2, k2, n2) trip counts and selected
-    via the `_greedy_mask` one-hot over the 6 statically unrolled orders,
-    mirroring loopnest.greedy_order exactly (tie-breaks included), so
-    order_mode="greedy" needs no scalar fallback.
-
-    Returns dict of (B,) arrays: valid (bool), energy_pj, time_ns,
-    tops_per_w, gflops, utilization, compute_ns, dram_ns, smem_ns,
-    dram_bytes, smem_bytes.  Invalid rows get inf energy/time and zero
-    rate metrics.
-    """
-    check_order_mode(order_mode)
+def cim_cast(batch: dict) -> dict:
+    """FLAT_FIELDS columns cast to the dtypes the cost equations use
+    (float32 throughout, bool for the two config flags)."""
     f32 = jnp.float32
-    M = batch["M"].astype(f32)
-    N = batch["N"].astype(f32)
-    K = batch["K"].astype(f32)
-    k_arr = batch["k_arr"].astype(f32)
-    n_arr = batch["n_arr"].astype(f32)
-    pk = batch["pk"].astype(f32)
-    pn = batch["pn"].astype(f32)
-    m1 = batch["m1"].astype(f32)
-    fk = batch["fk"].astype(f32)
-    fn = batch["fn"].astype(f32)
-    n_prims = batch["n_prims"].astype(f32)
-    at_rf = batch["at_rf"].astype(bool)
-    serialize = batch["serialize"].astype(bool)
-    k_rows = batch["k_rows"].astype(f32)
-    n_cols = batch["n_cols"].astype(f32)
-    Rp = batch["Rp"].astype(f32)
-    Cp = batch["Cp"].astype(f32)
-    mac_units = batch["mac_units"].astype(f32)
-    latency_ns = batch["latency_ns"].astype(f32)
-    mac_energy_pj = batch["mac_energy_pj"].astype(f32)
-    prim_capacity = batch["prim_capacity"].astype(f32)
+    cols = {f: batch[f].astype(f32) for f in FLAT_FIELDS}
+    cols["at_rf"] = batch["at_rf"].astype(bool)
+    cols["serialize"] = batch["serialize"].astype(bool)
+    return cols
+
+
+def cim_row_terms(cols: dict) -> dict:
+    """Order-independent terms of the CiM cost model: validity, compute
+    time, level-local traffic/energy, and the DRAM trip counts feeding
+    the per-order costs (`cim_order_cost`) and selection
+    (`cim_best_order`)."""
+    M, N, K = cols["M"], cols["N"], cols["K"]
+    k_arr, n_arr = cols["k_arr"], cols["n_arr"]
+    pk, pn, m1 = cols["pk"], cols["pn"], cols["m1"]
+    fk, fn = cols["fk"], cols["fn"]
+    n_prims, at_rf = cols["n_prims"], cols["at_rf"]
+    serialize = cols["serialize"]
+    k_rows, n_cols = cols["k_rows"], cols["n_cols"]
+    Rp, Cp = cols["Rp"], cols["Cp"]
+    mac_units = cols["mac_units"]
+    latency_ns = cols["latency_ns"]
+    mac_energy_pj = cols["mac_energy_pj"]
+    prim_capacity = cols["prim_capacity"]
 
     k0 = jnp.minimum(k_arr * pk, K)
     n0 = jnp.minimum(n_arr * pn, N)
@@ -214,10 +215,15 @@ def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
     compute_ns = waves * row_steps * col_steps * serial * latency_ns
 
     # --- level-local traffic + compute energy ---
-    smem_bytes = jnp.where(at_rf,
-                           waves * k0 + 2.0 * waves * n0 * PSUM_BYTES, 0.0)
-    e_smem = (smem_bytes / SMEM.access_granularity_bytes
-              * SMEM.access_energy_pj)
+    # energy is charged in whole accesses per tensor stream, exactly like
+    # the scalar reference (MemoryLevel.energy_pj ceils) — fractional
+    # per-byte charging diverges 8x at degenerate byte-scale GEMMs, which
+    # is how the property harness caught the old formulation
+    a_smem_reads = jnp.where(at_rf, waves * k0, 0.0)
+    z_smem_rmw = jnp.where(at_rf, 2.0 * waves * n0 * PSUM_BYTES, 0.0)
+    smem_bytes = a_smem_reads + z_smem_rmw
+    e_smem = (_accesses(a_smem_reads, SMEM) + _accesses(z_smem_rmw, SMEM)
+              ) * SMEM.access_energy_pj
     e_mac = macs * mac_energy_pj
     adds = output_elems * jnp.maximum(0.0, k_tiles * row_steps - 1)
     e_red = adds * TEMPORAL_REDUCTION_PJ
@@ -229,48 +235,86 @@ def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
                   + 2.0 * output_elems * jnp.maximum(0.0, k_tiles - 1)
                   * PSUM_BYTES)
     # weights are written into the arrays through the hosting level's port
-    host_pj_per_byte = jnp.where(
-        at_rf, RF.access_energy_pj / RF.access_granularity_bytes,
-        SMEM.access_energy_pj / SMEM.access_granularity_bytes)
+    host_gran = jnp.where(at_rf, float(RF.access_granularity_bytes),
+                          float(SMEM.access_granularity_bytes))
+    host_energy = jnp.where(at_rf, RF.access_energy_pj,
+                            SMEM.access_energy_pj)
 
-    # --- DRAM traffic over the 6 loop orders.  "exact": keep the
-    # min-energy order; "greedy": keep each row's greedy order (one-hot
-    # `_greedy_mask` selection — exactly one order matches per row). ---
     trips = {"M": m2, "K": k2, "N": n2}
-    w_foot = jnp.minimum(K, k0 * fk) * jnp.minimum(N, n0 * fn)
-    z_tile = m1 * jnp.minimum(N, n0 * fn)
-    cz = _coverage_vec(trips, "Z")
-    best_energy = jnp.full_like(m1, jnp.inf)
-    best_dram = jnp.zeros_like(m1)
+    util = (jnp.minimum(K, k0) * jnp.minimum(N, n0)
+            / (n_prims * mac_units))
+    return {
+        "valid": valid, "compute_ns": compute_ns,
+        "smem_bytes": smem_bytes, "e_smem": e_smem, "e_mac": e_mac,
+        "e_red": e_red, "trips": trips, "at_rf": at_rf,
+        "w_foot": jnp.minimum(K, k0 * fk) * jnp.minimum(N, n0 * fn),
+        "z_tile": m1 * jnp.minimum(N, n0 * fn),
+        "cz": _coverage_vec(trips, "Z"),
+        "a_block": a_block, "a_smem_lvl": a_smem_lvl,
+        "z_smem_lvl": z_smem_lvl, "host_gran": host_gran,
+        "host_energy": host_energy,
+        "input_elems": input_elems, "weight_elems": weight_elems,
+        "output_elems": output_elems, "ops": ops, "utilization": util,
+    }
+
+
+def cim_order_cost(pre: dict, order: tuple):
+    """(energy_pj, dram_bytes) of one static DRAM loop order, given the
+    order-independent terms from `cim_row_terms`."""
+    trips = pre["trips"]
+    w_fills = jnp.maximum(pre["w_foot"] * _revisit_vec(trips, order, "W"),
+                          pre["weight_elems"])
+    a_rf_fills = jnp.maximum(
+        pre["a_block"] * _revisit_vec(trips, order, "A"),
+        pre["input_elems"])
+    rz = _revisit_vec(trips, order, "Z")
+    spills = pre["z_tile"] * jnp.maximum(0.0, rz - pre["cz"])
+    z_rf_bytes = jnp.maximum(
+        pre["z_tile"] * pre["cz"] + 2.0 * spills * PSUM_BYTES,
+        pre["output_elems"])
+    a_fills = jnp.where(pre["at_rf"], a_rf_fills, pre["a_smem_lvl"])
+    z_bytes = jnp.where(pre["at_rf"], z_rf_bytes, pre["z_smem_lvl"])
+    dram_bytes = w_fills + a_fills + z_bytes
+    # whole accesses per tensor stream (W/A/Z ceil separately), matching
+    # the scalar reference's per-tensor MemoryLevel.energy_pj calls
+    e_dram = (_accesses(w_fills, DRAM) + _accesses(a_fills, DRAM)
+              + _accesses(z_bytes, DRAM)) * DRAM.access_energy_pj
+    e_w_write = (jnp.ceil(w_fills / pre["host_gran"])
+                 * pre["host_energy"])
+    energy = (e_dram + e_w_write + pre["e_smem"] + pre["e_mac"]
+              + pre["e_red"])
+    return energy, dram_bytes
+
+
+def cim_best_order(pre: dict, order_mode: str):
+    """In-kernel DRAM-order selection over the 6 statically unrolled
+    permutations: "exact" keeps the min-energy order, "greedy" keeps each
+    row's smallest-factor-outermost order via the `_greedy_mask` one-hot
+    (exactly one order matches per row, tie-breaks matching
+    loopnest.greedy_order bit-for-bit)."""
+    some = pre["trips"]["M"]
+    best_energy = jnp.full_like(some, jnp.inf)
+    best_dram = jnp.zeros_like(some)
     for order in _ORDERS:
-        w_fills = jnp.maximum(w_foot * _revisit_vec(trips, order, "W"),
-                              weight_elems)
-        a_rf_fills = jnp.maximum(a_block * _revisit_vec(trips, order, "A"),
-                                 input_elems)
-        rz = _revisit_vec(trips, order, "Z")
-        spills = z_tile * jnp.maximum(0.0, rz - cz)
-        z_rf_bytes = jnp.maximum(z_tile * cz + 2.0 * spills * PSUM_BYTES,
-                                 output_elems)
-        a_fills = jnp.where(at_rf, a_rf_fills, a_smem_lvl)
-        z_bytes = jnp.where(at_rf, z_rf_bytes, z_smem_lvl)
-        dram_bytes = w_fills + a_fills + z_bytes
-        e_dram = (dram_bytes / DRAM.access_granularity_bytes
-                  * DRAM.access_energy_pj)
-        e_w_write = w_fills * host_pj_per_byte
-        energy = e_dram + e_w_write + e_smem + e_mac + e_red
+        energy, dram_bytes = cim_order_cost(pre, order)
         if order_mode == "greedy":
-            keep = _greedy_mask(trips, order)
+            keep = _greedy_mask(pre["trips"], order)
         else:
             keep = energy < best_energy
         best_energy = jnp.where(keep, energy, best_energy)
         best_dram = jnp.where(keep, dram_bytes, best_dram)
+    return best_energy, best_dram
 
+
+def cim_outputs(pre: dict, best_energy, best_dram,
+                dram_eff: float = DRAM_STREAM_EFFICIENCY) -> dict:
+    """Assemble the public output dict from the selected order's cost."""
+    valid = pre["valid"]
+    ops = pre["ops"]
     dram_ns = best_dram / (DRAM.bandwidth_bytes_per_cycle * dram_eff)
-    smem_ns = smem_bytes / SMEM.bandwidth_bytes_per_cycle
-    time_ns = jnp.maximum(compute_ns, jnp.maximum(dram_ns, smem_ns))
-
-    util = (jnp.minimum(K, k0) * jnp.minimum(N, n0)
-            / (n_prims * mac_units))
+    smem_ns = pre["smem_bytes"] / SMEM.bandwidth_bytes_per_cycle
+    time_ns = jnp.maximum(pre["compute_ns"],
+                          jnp.maximum(dram_ns, smem_ns))
     inf = jnp.float32(jnp.inf)
     return {
         "valid": valid,
@@ -278,13 +322,41 @@ def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
         "time_ns": jnp.where(valid, time_ns, inf),
         "tops_per_w": jnp.where(valid, ops / best_energy, 0.0),
         "gflops": jnp.where(valid, ops / time_ns, 0.0),
-        "utilization": jnp.where(valid, util, 0.0),
-        "compute_ns": compute_ns,
+        "utilization": jnp.where(valid, pre["utilization"], 0.0),
+        "compute_ns": pre["compute_ns"],
         "dram_ns": dram_ns,
         "smem_ns": smem_ns,
         "dram_bytes": best_dram,
-        "smem_bytes": smem_bytes,
+        "smem_bytes": pre["smem_bytes"],
     }
+
+
+def evaluate_flat(batch: dict, dram_eff: float = DRAM_STREAM_EFFICIENCY,
+                  order_mode: str = "exact"):
+    """Evaluate B flattened (GEMM, config, mapping) rows at once.
+
+    batch: dict of (B,) arrays for every name in FLAT_FIELDS.  Rows may
+    mix different GEMMs, primitives, and CiM levels (RF vs SMEM — the two
+    traffic models are computed branch-free and selected per row).
+
+    order_mode (static under jit): "exact" keeps the min-energy DRAM loop
+    order of all 6 permutations (cost_model's exact mode); "greedy" keeps
+    each row's smallest-factor-outermost order, selected in-kernel
+    (`cim_best_order`), so order_mode="greedy" needs no scalar fallback.
+
+    This is the XLA-fused backend; the Pallas backend
+    (repro.kernels.sweep_eval) runs the same shared spec functions inside
+    one hand-written kernel.
+
+    Returns dict of (B,) arrays: valid (bool), energy_pj, time_ns,
+    tops_per_w, gflops, utilization, compute_ns, dram_ns, smem_ns,
+    dram_bytes, smem_bytes.  Invalid rows get inf energy/time and zero
+    rate metrics.
+    """
+    check_order_mode(order_mode)
+    pre = cim_row_terms(cim_cast(batch))
+    best_energy, best_dram = cim_best_order(pre, order_mode)
+    return cim_outputs(pre, best_energy, best_dram, dram_eff)
 
 
 def evaluate_batch(gemm: GEMM, cfg: CiMSystemConfig, mappings: dict,
@@ -349,8 +421,8 @@ def evaluate_baseline_flat(batch: dict,
     k_rf_trips = jnp.ceil(K / ktc)
     rf_reads = 2.0 * macs
     z_rf_rmw = 2.0 * out_elems * k_rf_trips * PSUM_BYTES
-    e_rf = ((rf_reads + z_rf_rmw) / RF.access_granularity_bytes
-            * RF.access_energy_pj)
+    # one ceil over the level total, as baseline.py's RF.energy_pj call
+    e_rf = _accesses(rf_reads + z_rf_rmw, RF) * RF.access_energy_pj
     e_pe = 2.0 * macs * spec.pe_buffer_energy_pj
     e_mac = macs * spec.mac_energy_pj
     adds = out_elems * jnp.maximum(0.0, k_rf_trips - 1.0)
@@ -385,8 +457,7 @@ def evaluate_baseline_flat(batch: dict,
             z_spill = sm_m * sm_n * jnp.maximum(0.0, rz - cz_smem)
             z_dram = sm_m * sm_n * cz_smem + 2.0 * z_spill * PSUM_BYTES
             dram_bytes = a_fills + w_fills + jnp.maximum(z_dram, out_elems)
-            e_dram = (dram_bytes / DRAM.access_granularity_bytes
-                      * DRAM.access_energy_pj)
+            e_dram = _accesses(dram_bytes, DRAM) * DRAM.access_energy_pj
 
             a_rf = jnp.maximum(mtc * ktc * _revisit_seq(above_rf, "A"),
                                M * K)
@@ -397,8 +468,7 @@ def evaluate_baseline_flat(batch: dict,
                     + 2.0 * mtc * ntc * jnp.maximum(0.0, rzr - czr_rf)
                     * PSUM_BYTES)
             smem_bytes = a_rf + w_rf + z_rf
-            e_smem = (smem_bytes / SMEM.access_granularity_bytes
-                      * SMEM.access_energy_pj)
+            e_smem = _accesses(smem_bytes, SMEM) * SMEM.access_energy_pj
 
             energy = e_dram + e_smem + e_rf + e_pe + e_mac + e_red
             dram_ns = dram_bytes / DRAM.bandwidth_bytes_per_cycle

@@ -3,10 +3,17 @@
 int8_gemm       — weight-stationary INT8 GEMM (the paper's CiM insight on TPU)
 flash_attention — blocked causal attention (prefill)
 decode_attention— flash-decoding over long KV caches (serve)
+sweep_eval      — fused planner-sweep row evaluator (the sweep engine's
+                  backend="pallas" inner loop)
 """
-from . import ops, ref
+# NOTE: sweep_eval is exported as the MODULE (its main entry point is
+# sweep_eval.sweep_eval) — importing the function here would shadow the
+# submodule attribute and break `repro.kernels.sweep_eval.<anything>`.
+from . import ops, ref, sweep_eval
 from .int8_gemm import int8_gemm
 from .flash_attention import flash_attention
 from .decode_attention import decode_attention
+from .sweep_eval import pallas_status
 
-__all__ = ["ops", "ref", "int8_gemm", "flash_attention", "decode_attention"]
+__all__ = ["ops", "ref", "int8_gemm", "flash_attention",
+           "decode_attention", "sweep_eval", "pallas_status"]

@@ -93,12 +93,22 @@ def planner_cache_table(cells: list[dict]) -> str:
         # predate the routing block)
         routed = (f"{p['cim_routed_fraction']:.2f}"
                   if "cim_routed_fraction" in p else "-")
+        # per-backend keyspace breakdown + pallas fallback marker (older
+        # cell JSONs predate both fields)
+        backends = " ".join(f"{b}:{v['hits']}h/{v['misses']}m"
+                            for b, v in sorted(
+                                (eng.get("backends") or {}).items()))
+        if eng.get("pallas_fallback"):
+            backends = (backends + " pallas→xla").strip()
+        engine_cell = f"{eng['hits']}h/{eng['misses']}m size={eng['size']}"
+        if backends:
+            engine_cell += f" [{backends}]"
         lines.append(
             f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
             f"{s['cim_fraction']:.2f} | {routed} | "
             f"{s['energy_gain_x']:.2f}x | "
             f"{p['plan_hits']}/{p['plan_misses']} | "
-            f"{eng['hits']}h/{eng['misses']}m size={eng['size']} |")
+            f"{engine_cell} |")
     return "\n".join(lines) if found else "(no decode cells with planner telemetry)"
 
 

@@ -9,6 +9,9 @@ Supported surface:
   strategies.integers(min_value, max_value) / integers(lo, hi)
   strategies.sampled_from(seq)
   strategies.lists(elem_strategy, min_size=, max_size=)
+  strategies.booleans()
+  strategies.tuples(*elem_strategies)
+  @strategies.composite  (draw-based strategies, positional/kw args)
 
 Example generation is deterministic (seeded per test name) and always
 includes the strategy's boundary values first, so property tests exercise
@@ -69,6 +72,54 @@ class _Lists(_Strategy):
         return [self.elem.example(rng) for _ in range(n)]
 
 
+class _Booleans(_Strategy):
+    def boundary(self):
+        return [False, True]
+
+    def example(self, rng):
+        return rng.random() < 0.5
+
+
+class _Tuples(_Strategy):
+    def __init__(self, elems):
+        self.elems = list(elems)
+
+    def boundary(self):
+        # low-corner and high-corner tuples: exercises the degenerate
+        # all-minimum case (e.g. M=N=K=1 GEMMs) before any random draw
+        rng = random.Random(0)
+        lo = tuple((s.boundary() or [s.example(rng)])[0] for s in self.elems)
+        hi = tuple((s.boundary() or [s.example(rng)])[-1] for s in self.elems)
+        return [lo, hi]
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.elems)
+
+
+class _Composite(_Strategy):
+    """Draw-based strategy: `fn(draw, *args, **kwargs)` where draw(s)
+    samples sub-strategy s.  Boundary generation routes every draw to the
+    sub-strategies' own boundary values (low corner, then high corner)."""
+
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def boundary(self):
+        out = []
+        for pick in (0, -1):
+            rng = random.Random(pick)
+
+            def draw(s, _p=pick, _rng=rng):
+                b = s.boundary()
+                return b[_p] if b else s.example(_rng)
+
+            out.append(self.fn(draw, *self.args, **self.kwargs))
+        return out
+
+    def example(self, rng):
+        return self.fn(lambda s: s.example(rng), *self.args, **self.kwargs)
+
+
 class strategies:                            # mirrors `hypothesis.strategies`
     @staticmethod
     def integers(min_value=None, max_value=None):
@@ -83,6 +134,22 @@ class strategies:                            # mirrors `hypothesis.strategies`
     @staticmethod
     def lists(elem, min_size=0, max_size=None):
         return _Lists(elem, min_size=min_size, max_size=max_size)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def tuples(*elems):
+        return _Tuples(elems)
+
+    @staticmethod
+    def composite(fn):
+        def make(*args, **kwargs):
+            return _Composite(fn, args, kwargs)
+        make.__name__ = getattr(fn, "__name__", "composite")
+        make.__doc__ = fn.__doc__
+        return make
 
 
 def settings(max_examples: int = 100, deadline=None, **_ignored):

@@ -89,3 +89,7 @@ def test_dryrun_cell_compiles_on_production_mesh(cell, tmp_path):
     assert p["summary"]["n_gemms"] > 0
     assert p["plan_hits"] + p["plan_misses"] > 0
     assert p["cache"]["size"] > 0
+    # per-backend keyspace breakdown + pallas fallback field ride along
+    # in the embedded engine cache_info (report.py renders them)
+    assert p["cache"]["backends"]["vectorized"]["misses"] > 0
+    assert "pallas_fallback" in p["cache"]

@@ -1,0 +1,96 @@
+"""Golden verdict fingerprint for the full planner grid.
+
+tests/golden/planner_verdicts.csv pins the What/When/Where verdict of
+every GEMM in the full llm_workloads set (all assigned archs x train_4k
++ decode_32k = 223 GEMMs) under the standard configs.  Any backend or
+cost-model change that silently drifts a verdict fails here with a
+per-row diff — naming the GEMM, the golden verdict and the new one —
+instead of shipping a quiet behavioural change.  Both batched backends
+(vectorized XLA and the fused Pallas kernel) are asserted against the
+same file, which also gates the acceptance criterion that
+plan_workload(backend="pallas") matches the vectorized backend on the
+full grid.
+
+Intentional verdict changes regenerate the file:
+
+    PYTHONPATH=src python tests/test_golden_verdicts.py
+
+and the diff lands in review along with the change that caused it.
+"""
+import csv
+import os
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.llm_workloads import gemms_of_model
+from repro.core.planner import plan_workload
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "planner_verdicts.csv")
+GRID_SHAPES = ("train_4k", "decode_32k")
+FIELDS = ("arch", "shape", "label", "M", "N", "K",
+          "best_energy", "best_throughput", "use_cim", "where")
+N_GRID = 223
+
+
+def _grid():
+    for arch, mc in ARCHS.items():
+        for sname in GRID_SHAPES:
+            for g in gemms_of_model(mc, SHAPES[sname]):
+                yield arch, sname, g
+
+
+def _verdict_rows(backend: str) -> list[dict]:
+    entries = list(_grid())
+    decisions = plan_workload([g for _, _, g in entries], backend=backend)
+    return [{"arch": arch, "shape": sname, "label": g.label,
+             "M": str(g.M), "N": str(g.N), "K": str(g.K),
+             "best_energy": d.best_energy,
+             "best_throughput": d.best_throughput,
+             "use_cim": str(int(d.use_cim)), "where": d.where}
+            for (arch, sname, g), d in zip(entries, decisions)]
+
+
+def _assert_matches_golden(backend: str) -> None:
+    with open(GOLDEN) as f:
+        golden = list(csv.DictReader(f))
+    got = _verdict_rows(backend)
+    assert len(golden) == N_GRID, (
+        f"golden file has {len(golden)} rows, expected {N_GRID} — "
+        f"regenerate it (see module docstring)")
+    assert len(got) == N_GRID, (
+        f"workload grid produced {len(got)} GEMMs, expected {N_GRID} — "
+        f"llm_workloads changed; regenerate the golden file")
+    diffs = []
+    for i, (want, have) in enumerate(zip(golden, got)):
+        delta = [f"{k}: golden={want[k]!r} got={have[k]!r}"
+                 for k in FIELDS if want[k] != have[k]]
+        if delta:
+            diffs.append(f"  row {i} [{want['arch']}/{want['shape']}/"
+                         f"{want['label']}]: " + "; ".join(delta))
+    assert not diffs, (
+        f"{backend} backend drifted from the golden verdicts on "
+        f"{len(diffs)}/{N_GRID} rows:\n" + "\n".join(diffs[:25])
+        + ("\n  ..." if len(diffs) > 25 else "")
+        + "\nIf the drift is intentional, regenerate tests/golden/"
+          "planner_verdicts.csv (see module docstring).")
+
+
+def test_golden_verdicts_vectorized():
+    _assert_matches_golden("vectorized")
+
+
+def test_golden_verdicts_pallas():
+    """The full-grid pallas gate: identical What/When/Where verdicts to
+    the committed fingerprint (and therefore to the vectorized backend)
+    on all 223 GEMMs."""
+    _assert_matches_golden("pallas")
+
+
+if __name__ == "__main__":
+    rows = _verdict_rows("vectorized")
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    with open(GOLDEN, "w", newline="") as f:
+        writer = csv.DictWriter(f, FIELDS)
+        writer.writeheader()
+        writer.writerows(rows)
+    print(f"wrote {len(rows)} verdict rows to {GOLDEN}")

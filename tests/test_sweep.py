@@ -330,6 +330,93 @@ def test_engine_cache_thread_safety():
     assert sum(h + m for h, m in local_counts) == n_threads * n_iter
 
 
+# --- pallas backend --------------------------------------------------------
+
+
+def test_pallas_backend_parity_and_cache_keyspace():
+    """backend="pallas" runs the fused kernel into its OWN result-cache
+    keyspace (a shared keyspace would let parity tests pass on LRU hits
+    instead of kernel output), and cache_info() breaks hits/misses down
+    per backend."""
+    eng = SweepEngine(mesh=None)
+    g = GEMM(512, 1024, 1024)
+    cfg = CONFIGS["Digital-6T@RF"]
+    mv = eng.cim_metrics([(g, cfg)], backend="vectorized")[0]
+    mp = eng.cim_metrics([(g, cfg)], backend="pallas")[0]
+    assert mp is not mv                    # distinct keyspaces, both cold
+    assert mp.energy_pj == pytest.approx(mv.energy_pj, rel=1e-5)
+    assert mp.time_ns == pytest.approx(mv.time_ns, rel=1e-5)
+    assert eng.cim_metrics([(g, cfg)], backend="pallas")[0] is mp
+    info = eng.cache_info()
+    assert info["backends"]["vectorized"] == {"hits": 0, "misses": 1}
+    assert info["backends"]["pallas"] == {"hits": 1, "misses": 1}
+    assert info["pallas_fallback"] is None
+    # scalar-reference agreement (the property suite covers this wide;
+    # here it pins the engine-level path end to end)
+    ms = evaluate(g, cfg)
+    assert mp.energy_pj == pytest.approx(ms.energy_pj, rel=0.02)
+
+
+def test_pallas_fallback_records_reason(monkeypatch):
+    """On a platform whose Pallas lowering is unavailable, a pallas
+    request transparently reuses the XLA kernel + vectorized keyspace and
+    cache_info()/telemetry say so."""
+    import repro.kernels.sweep_eval as se
+    monkeypatch.setattr(se, "_STATUS",
+                        {"mode": "unavailable",
+                         "reason": "gpu: NotImplementedError: no lowering"})
+    eng = SweepEngine(mesh=None)
+    g = GEMM(256, 512, 512)
+    cfg = CONFIGS["Analog-8T@SMEM-A"]
+    mp = eng.cim_metrics([(g, cfg)], backend="pallas")[0]
+    info = eng.cache_info()
+    assert info["pallas_fallback"] == ("gpu: NotImplementedError: "
+                                       "no lowering")
+    assert "pallas" not in info["backends"]          # keyspace unused
+    assert info["backends"]["vectorized"]["misses"] == 1
+    # the fallback result IS the vectorized entry (no double evaluation)
+    assert eng.cim_metrics([(g, cfg)], backend="vectorized")[0] is mp
+    # fallback reason survives cache_clear (platform fact, not cache state)
+    eng.cache_clear()
+    assert eng.cache_info()["pallas_fallback"] is not None
+
+
+def test_measured_cache_delta_carries_backend_breakdown():
+    """Serving/dryrun telemetry consumers read measured_cache_delta's
+    engine block — the per-backend breakdown and fallback field must be
+    in it (launch.serve prints it; dryrun decode cells embed it)."""
+    from repro.core.sweep import measured_cache_delta, sweep_evaluate
+    g = GEMM(96, 160, 224)
+    _, tel = measured_cache_delta(
+        lambda: sweep_evaluate(g, CONFIGS["Digital-8T@RF"]))
+    assert tel["plan_hits"] + tel["plan_misses"] >= 1
+    eng = tel["engine"]
+    assert "backends" in eng and "pallas_fallback" in eng
+    assert eng["backends"]["vectorized"]["misses"] >= 1
+
+
+def test_report_renders_backend_breakdown():
+    """launch.report's planner-cache table shows the per-backend counts
+    and flags a recorded pallas fallback; cells predating the fields
+    still render."""
+    from repro.launch.report import planner_cache_table
+    base = {"status": "ok", "arch": "a", "shape": "s", "mesh": "single"}
+    planner = {"summary": {"cim_fraction": 0.5, "energy_gain_x": 2.0},
+               "plan_hits": 3, "plan_misses": 4,
+               "cim_routed_fraction": 0.25,
+               "cache": {"hits": 7, "misses": 9, "size": 16,
+                         "backends": {"vectorized": {"hits": 5,
+                                                     "misses": 6},
+                                      "pallas": {"hits": 2, "misses": 3}},
+                         "pallas_fallback": "gpu: no lowering"}}
+    table = planner_cache_table([{**base, "planner": planner}])
+    assert "vectorized:5h/6m" in table
+    assert "pallas:2h/3m" in table
+    assert "pallas→xla" in table
+    legacy = {**planner, "cache": {"hits": 1, "misses": 2, "size": 3}}
+    assert "size=3" in planner_cache_table([{**base, "planner": legacy}])
+
+
 # --- argument validation ---------------------------------------------------
 
 
@@ -339,6 +426,11 @@ def test_unknown_backend_rejected():
         decide(g, backend="vectorised")
     with pytest.raises(ValueError, match="unknown planner backend"):
         plan_workload([g], backend="batched")
+    with pytest.raises(ValueError, match="unknown planner backend"):
+        plan_workload([g], backend="palas")
+    with pytest.raises(ValueError, match="unknown sweep backend"):
+        SweepEngine(mesh=None).cim_metrics(
+            [(g, CONFIGS["Digital-6T@RF"])], backend="xla")
 
 
 def test_unknown_order_mode_rejected_by_both_backends():
@@ -414,6 +506,7 @@ def test_jit_cache_clear_covers_every_kernel():
     cfg = CONFIGS["Digital-6T@RF"]
     before = eng.cim_metrics([(g, cfg)])[0]
     eng.cim_metrics([(g, cfg)], order_mode="greedy")
+    eng.cim_metrics([(g, cfg)], backend="pallas")
     sharded.cim_metrics([(g, cfg)])
     assert jit_kernel_count() > 0
     jit_cache_clear()
