@@ -16,6 +16,13 @@ parity.  The headline numbers:
                     explicit >=1-device mesh (launch.mesh.row_mesh),
                     with a bitwise metrics-parity check against the
                     unsharded engine,
+  * streamed      — the distributed engine's memory-bounded streaming
+                    enumerator (SweepEngine(chunk_rows=...)): the grid
+                    folds through the kernel in mesh-aligned tiles,
+                    bitwise-parity-gated against the whole-batch engine;
+                    the derived "distributed" block records tile counts
+                    and jax.process_count() so a pod-scale run
+                    (repro.launch.distributed) is self-describing,
   * pallas        — the fused hand-written sweep kernel
                     (repro.kernels.sweep_eval) as the planner backend,
                     verdict-parity-gated against the vectorized run, plus
@@ -193,6 +200,23 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
         and a.chosen.time_ns == b.chosen.time_ns
         for a, b in zip(sharded, unsharded))
 
+    # --- streaming chunked evaluation: the distributed engine's
+    # memory-bounded enumerator (repro.launch.distributed pairs it with a
+    # multi-host mesh; here it runs on the local mesh so CI measures the
+    # chunking overhead and gates bitwise parity — a pod run records its
+    # process topology in the same block via jax.process_count())
+    chunk_rows = 2048
+    chunked_engine = SweepEngine(mesh=None, chunk_rows=chunk_rows)
+    streamed_s, streamed = _best_of(
+        repeats, lambda: plan_workload_batched(gemms, engine=chunked_engine),
+        setup=chunked_engine.cache_clear)
+    streamed_parity_ok = all(
+        a.use_cim == b.use_cim and a.best_energy == b.best_energy
+        and a.chosen.energy_pj == b.chosen.energy_pj
+        and a.chosen.time_ns == b.chosen.time_ns
+        for a, b in zip(streamed, unsharded))
+    chunk_tel = chunked_engine.cache_info()["chunks"]
+
     # --- pallas backend: the fused sweep kernel as the planner path, with
     # verdict parity against the vectorized run and a kernel-vs-kernel
     # large-batch timing row (the ROADMAP's Pallas-vs-XLA-fusion question)
@@ -267,6 +291,17 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
         "sharded": {"devices": mesh.size,
                     "seconds": round(sharded_s, 3),
                     "parity_ok": sharded_parity_ok},
+        "distributed": {
+            # single-process CI measures the streaming enumerator; a
+            # pod-scale run (jax.distributed) self-describes here
+            "processes": jax.process_count(),
+            "chunk_rows": chunk_rows,
+            "chunks_evaluated": chunk_tel["evaluated"],
+            "rows": chunk_tel["rows"],
+            "padded_rows": chunk_tel["padded_rows"],
+            "seconds": round(streamed_s, 3),
+            "parity_ok": streamed_parity_ok,
+        },
         "pallas": {
             "mode": status["mode"],
             # only a real fallback (mode == "unavailable") is a fallback;
@@ -292,6 +327,9 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
             {"backend": "vectorized_greedy", "seconds": round(greedy_s, 4)},
             {"backend": f"vectorized_sharded_{mesh.size}dev",
              "seconds": round(sharded_s, 4)},
+            {"backend": f"streamed_{chunk_tel['evaluated']}"
+                        f"chunks_{chunk_rows}rows",
+             "seconds": round(streamed_s, 4)},
             {"backend": f"pallas_{status['mode']}",
              "seconds": round(pallas_s, 4)}] + large_rows
     if write_json:
@@ -300,7 +338,8 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
                 or derived["greedy_verdict_mismatches"]
                 or pallas_mismatches
                 or not pallas_sanity_ok
-                or not sharded_parity_ok or not sanity_ok):
+                or not sharded_parity_ok or not streamed_parity_ok
+                or not sanity_ok):
             # quarantine: callers like benchmarks/run.py don't see the
             # __main__ gates below, and a bad run must not silently
             # replace the trusted trajectory entry
@@ -329,6 +368,9 @@ if __name__ == "__main__":
     if not derived["sharded"]["parity_ok"]:
         sys.exit("sharded parity regression: row-sharded metrics differ "
                  "from the single-device engine")
+    if not derived["distributed"]["parity_ok"]:
+        sys.exit("streamed parity regression: chunked evaluation differs "
+                 "from the whole-batch engine")
     if not derived["sanity_ok"]:
         sys.exit("timing sanity violated (see WARNING above): rerun on a "
                  "quiet machine before trusting this artifact")

@@ -1,0 +1,16 @@
+"""Reproduction of "WWW: What, When, Where to Compute-in-Memory" grown
+into a jax/pallas planning + serving stack.
+
+Layers (see docs/architecture.md for the map and dataflow):
+
+* `repro.core` — GEMM taxonomy, scalar + vectorized cost models, the
+  batched sweep engine, and the What/When/Where planner.
+* `repro.kernels` — hand-written Pallas kernels (sweep inner loop, INT8
+  GEMM, attention).
+* `repro.launch` — meshes (single-host and jax.distributed multi-host),
+  dry-run driver, roofline, serve/train CLIs, report rendering.
+* `repro.models` / `repro.serving` / `repro.quant` — reduced LM
+  architectures and the planner-gated INT8 serving session.
+* `repro.train` / `repro.optim` / `repro.data` / `repro.sharding` —
+  the training substrate.
+"""

@@ -33,16 +33,36 @@ Pallas lowering is unavailable the engine transparently falls back to
 the XLA kernel and records the reason in `cache_info()["pallas_fallback"]`
 (which also carries a per-backend hit/miss breakdown).
 
-Multi-device scaling: an engine given a 1-D row mesh (launch.mesh.row_mesh)
-shards every flattened row batch across the mesh devices with `shard_map`
-— each row is independent, so `exhaustive_best`-scale grids (tens of
-thousands of rows per workload) split evenly over the row axis.  The
-default engine auto-shards over all local devices of an accelerator
-platform and keeps the plain single-device path when only one device
-exists (or on CPU, where forced host-device counts are a debugging
-fiction, not parallel hardware).
+Multi-device and multi-host scaling: an engine given a 1-D row mesh
+(launch.mesh.row_mesh) shards every flattened row batch across the mesh
+devices with `shard_map` — each row is independent, so
+`exhaustive_best`-scale grids (tens of thousands of rows per workload)
+split evenly over the row axis.  A mesh spanning several
+`jax.distributed` processes (launch.distributed.global_row_mesh) runs the
+same kernels pod-scale: every host enumerates the same grid SPMD,
+materializes on device only the row shard its local devices own
+(launch.distributed.host_local_to_global), and all-gathers only the
+per-row output columns (_OUT_KEYS) for the replicated argmin/verdict
+reduction — intermediate cost fields never cross hosts.  The default
+engine auto-shards over all devices of an accelerator platform (the
+global list: on a pod that is already every host's devices) and keeps the
+plain single-device path when only one device exists (or on CPU, where
+forced host-device counts are a debugging fiction, not parallel
+hardware).
 
-Verdict parity with the scalar path is enforced by tests/test_sweep.py.
+Streaming chunk enumerator: `SweepEngine(chunk_rows=N)` bounds device
+memory per evaluation — the flattened grid is generated group by group
+(a group = one query's candidate rows) and folded through the jitted
+kernel in mesh-aligned tiles of at most N rows, with a cross-chunk
+running reduction per group, so workload grids larger than one host's
+memory stream through the engine.  Per-chunk accounting lands in
+`cache_info()["chunks"]` (and, on a multi-host mesh,
+`cache_info()["distributed"]` carries the process topology + row shard
+balance).
+
+Verdict parity with the scalar path is enforced by tests/test_sweep.py;
+multi-process parity against the golden verdict fingerprint by
+tests/test_distributed_sweep.py.
 """
 from __future__ import annotations
 
@@ -121,11 +141,14 @@ def _jit_kernel(kind: str, order_mode: str = "exact", mesh=None,
 
 
 def _auto_mesh():
-    """Row mesh over all local devices when they are real parallel
-    hardware; None (single-device path) for one device or CPU hosts
+    """Row mesh over all devices when they are real parallel hardware;
+    None (single-device path) for one device or CPU hosts
     (XLA_FLAGS-forced CPU device counts emulate topology, they don't add
     FLOPs — sharding tiny analytical batches over them only adds
-    dispatch overhead)."""
+    dispatch overhead).  jax.devices() is the GLOBAL list: in a
+    jax.distributed multi-process job on accelerators the auto mesh
+    already spans every host, and evaluation takes the multi-host path
+    (global sharded inputs + output all-gather)."""
     devices = jax.devices()
     if len(devices) > 1 and devices[0].platform != "cpu":
         from ..launch.mesh import row_mesh
@@ -155,16 +178,79 @@ def _pad_len(n: int, shards: int = 1) -> int:
     return p
 
 
-def _run_padded(fn, batch: dict, n: int, shards: int = 1) -> dict:
+def _mesh_is_multihost(mesh) -> bool:
+    """Does `mesh` contain devices of other jax.distributed processes?
+    (Local duplicate of launch.distributed.is_multihost so the hot path
+    needs no launch import on the common single-host mesh.)"""
+    if mesh is None:
+        return False
+    pi = jax.process_index()
+    return any(d.process_index != pi for d in mesh.devices.flat)
+
+
+def _run_padded(fn, batch: dict, n: int, shards: int = 1,
+                mesh=None) -> dict:
     """jit-run a flat batch padded (by repeating row 0) to a pow2 length
-    (multiple of `shards` when the kernel is row-sharded)."""
+    (multiple of `shards` when the kernel is row-sharded).
+
+    On a multi-host mesh each process feeds the kernel global arrays of
+    which it materializes only its addressable row shard, and the per-row
+    output columns — only those — are all-gathered back so every host
+    can run the identical reduction (launch.distributed)."""
     m = _pad_len(max(1, n), shards)
     if m != n:
         batch = {k: np.concatenate(
             [v, np.broadcast_to(v[:1], (m - n,) + v.shape[1:])])
             for k, v in batch.items()}
-    out = fn({k: np.asarray(v, np.float32) for k, v in batch.items()})
+    arrs = {k: np.asarray(v, np.float32) for k, v in batch.items()}
+    if _mesh_is_multihost(mesh):
+        from ..launch import distributed as dist
+        out = fn(dist.host_local_to_global(arrs, mesh))
+        out = dist.gather_rows({k: out[k] for k in _OUT_KEYS})
+    else:
+        out = fn(arrs)
     return {k: np.asarray(out[k])[:n] for k in _OUT_KEYS}
+
+
+def _cat_cols(parts: list[dict]) -> dict:
+    """Concatenate columnar row-group slices into one flat batch."""
+    if len(parts) == 1:
+        return dict(parts[0])
+    return {k: np.concatenate([p[k] for p in parts]) for k in parts[0]}
+
+
+def _iter_chunks(groups, chunk_rows: int | None):
+    """The streaming enumerator: walk `groups` — an iterable of
+    (gid, cols) where cols is a dict of equal-length (n,) numpy columns —
+    and yield evaluation tiles of at most `chunk_rows` rows.
+
+    Yields (batch, segments): `batch` is the concatenated columns,
+    `segments` is [(gid, group_offset, lo, hi)] mapping each slice of the
+    tile back to its group (a group larger than a tile spans several
+    tiles; the caller folds segments through a running per-group
+    reduction).  chunk_rows=None degenerates to one tile holding
+    everything — the classic whole-batch path.  Groups are consumed
+    lazily, so grids larger than host memory stream through as long as
+    each *group* fits.
+    """
+    parts: list[dict] = []
+    segs: list[tuple] = []
+    filled = 0
+    for gid, cols in groups:
+        n = len(next(iter(cols.values())))
+        off = 0
+        while off < n:
+            take = (n - off if chunk_rows is None
+                    else min(n - off, chunk_rows - filled))
+            parts.append({k: v[off:off + take] for k, v in cols.items()})
+            segs.append((gid, off, filled, filled + take))
+            filled += take
+            off += take
+            if chunk_rows is not None and filled >= chunk_rows:
+                yield _cat_cols(parts), segs
+                parts, segs, filled = [], [], 0
+    if filled:
+        yield _cat_cols(parts), segs
 
 
 class SweepEngine:
@@ -174,19 +260,35 @@ class SweepEngine:
     cost model produces (within float32 tolerance), but evaluate every
     uncached (GEMM, config) pair of a query in one fused device call.
 
-    mesh: "auto" (default) shards row batches over all local accelerator
+    mesh: "auto" (default) shards row batches over all accelerator
     devices when more than one exists (single-device fast path
     otherwise); None forces the unsharded path; an explicit 1-D mesh
     (launch.mesh.row_mesh) is always honored — including a 1-device mesh,
-    which exercises the shard_map path for parity testing.
+    which exercises the shard_map path for parity testing, and a
+    multi-host mesh (launch.distributed.global_row_mesh), which takes the
+    global-array + output-all-gather path.
+
+    chunk_rows: None (default) evaluates each query batch in one device
+    call; an integer bounds every call to at most that many rows — the
+    flattened grid streams through the kernel in mesh-aligned tiles with
+    a cross-chunk running reduction per query, so grids larger than one
+    host's device memory still evaluate (and every chunk lands in the
+    LRU/telemetry accounting as it completes).  Results are bitwise
+    identical either way: rows are evaluated elementwise, and the
+    reductions preserve first-index tie-breaks across tiles.
 
     All cache mutations (and the hit/miss counters) are serialized by a
     per-engine lock: the process-wide default engine is shared by every
     ServeSession.kernel_plan build, which may run on concurrent threads.
     """
 
-    def __init__(self, cache_size: int = 16384, mesh="auto"):
+    def __init__(self, cache_size: int = 16384, mesh="auto",
+                 chunk_rows: int | None = None):
+        if chunk_rows is not None and chunk_rows < 1:
+            raise ValueError(f"chunk_rows must be >= 1 or None, "
+                             f"got {chunk_rows}")
         self.cache_size = cache_size
+        self.chunk_rows = chunk_rows
         self._mesh = mesh
         self._cache: OrderedDict = OrderedDict()
         self._lock = threading.RLock()
@@ -198,6 +300,10 @@ class SweepEngine:
         # back to the XLA kernel on this engine
         self._backend_counts: dict = {}
         self._pallas_fallback: str | None = None
+        # streaming-enumerator accounting (cache_info()["chunks"])
+        self._chunks_evaluated = 0
+        self._rows_evaluated = 0
+        self._rows_padded = 0
 
     @property
     def mesh(self):
@@ -245,15 +351,33 @@ class SweepEngine:
     def cache_info(self) -> dict:
         """Size + hit/miss totals, the per-backend breakdown (which
         keyspace — vectorized / pallas / baseline — each lookup resolved
-        to), and `pallas_fallback`: None normally, the recorded lowering
+        to), `pallas_fallback` (None normally, the recorded lowering
         error if a backend="pallas" request ever fell back to the XLA
-        kernel on this engine (surfaced by serve/dryrun telemetry)."""
+        kernel), the streaming-enumerator accounting under "chunks"
+        (tiles evaluated / real vs padding rows), and — on a multi-host
+        mesh — a "distributed" block with the process topology and the
+        cumulative per-process row shard balance.  Serve/dryrun telemetry
+        embed this dict verbatim (launch.report renders it)."""
         with self._lock:
-            return {"size": len(self._cache), "max_size": self.cache_size,
+            info = {"size": len(self._cache), "max_size": self.cache_size,
                     "hits": self.hits, "misses": self.misses,
                     "backends": {b: dict(c) for b, c in
                                  self._backend_counts.items()},
-                    "pallas_fallback": self._pallas_fallback}
+                    "pallas_fallback": self._pallas_fallback,
+                    "chunks": {"chunk_rows": self.chunk_rows,
+                               "evaluated": self._chunks_evaluated,
+                               "rows": self._rows_evaluated,
+                               "padded_rows": self._rows_padded},
+                    "distributed": None}
+        if _mesh_is_multihost(self.mesh):
+            from ..launch import distributed as dist
+            total = info["chunks"]["rows"] + info["chunks"]["padded_rows"]
+            info["distributed"] = {
+                **dist.distributed_info(),
+                "mesh_devices": self.mesh.size,
+                "shard_balance": dist.shard_balance(total, self.mesh),
+            }
+        return info
 
     def cache_clear(self) -> None:
         # _pallas_fallback survives on purpose: it records a platform
@@ -262,6 +386,32 @@ class SweepEngine:
             self._cache.clear()
             self.hits = self.misses = 0
             self._backend_counts = {}
+            self._chunks_evaluated = 0
+            self._rows_evaluated = 0
+            self._rows_padded = 0
+
+    # --- streaming evaluation --------------------------------------------
+    def _stream_batches(self, fn, groups, update) -> None:
+        """Fold a lazily-enumerated grid through the jitted kernel.
+
+        groups: iterable of (gid, cols) — see `_iter_chunks`.  Every tile
+        is padded/mesh-aligned and evaluated in ONE device call
+        (`_run_padded`, which takes the global-array path on a multi-host
+        mesh); `update(gid, group_offset, out, lo, hi)` folds each tile
+        segment into the caller's running per-group reduction.  Per-tile
+        accounting lands in the "chunks" telemetry.
+        """
+        shards = self.n_shards
+        mesh = self.mesh
+        for cols, segs in _iter_chunks(groups, self.chunk_rows):
+            n = len(next(iter(cols.values())))
+            out = _run_padded(fn, cols, n, shards, mesh)
+            with self._lock:
+                self._chunks_evaluated += 1
+                self._rows_evaluated += n
+                self._rows_padded += _pad_len(max(1, n), shards) - n
+            for gid, off, lo, hi in segs:
+                update(gid, off, out, lo, hi)
 
     # --- CiM options ------------------------------------------------------
     def _resolve_cim_backend(self, backend: str) -> tuple[str, str]:
@@ -311,30 +461,50 @@ class SweepEngine:
                 todo.setdefault(key, (g, c))
 
         if todo:
-            flat, slices = [], []
-            for key, (g, c) in todo.items():
-                maps = candidate_mappings(g, c, order_mode)
-                crow = config_row(c)
-                start = len(flat)
-                flat.extend(
-                    {"M": g.M, "N": g.N, "K": g.K, **crow,
-                     **{f: getattr(mp, f) for f in MAP_FIELDS}}
-                    for mp in maps)
-                slices.append((key, g, c, maps, start, start + len(maps)))
-            batch = {f: np.asarray([r[f] for r in flat], np.float32)
-                     for f in flat[0]}
             fn = _jit_kernel("cim", order_mode, self.mesh, kernel)
-            out = _run_padded(fn, batch, len(flat), self.n_shards)
-            for key, g, c, maps, lo, hi in slices:
-                e = out["energy_pj"][lo:hi]
-                ok = out["valid"][lo:hi]
-                if not ok.any():               # should not happen: mappings
+            best: dict = {}          # key -> [energy, out_row, mapping]
+            # candidate lists of groups still in flight (some rows not
+            # yet reduced) — dropped as soon as a group completes, so
+            # host memory holds O(chunk) mappings, not the whole grid
+            live: dict = {}          # key -> [maps, rows_remaining]
+
+            def groups():
+                # the streaming enumerator: candidate mappings are
+                # generated per query as tiles fill, never all at once
+                for key, (g, c) in todo.items():
+                    maps = candidate_mappings(g, c, order_mode)
+                    live[key] = [maps, len(maps)]
+                    crow = {"M": g.M, "N": g.N, "K": g.K, **config_row(c)}
+                    cols = {f: np.full(len(maps), float(v), np.float32)
+                            for f, v in crow.items()}
+                    for f in MAP_FIELDS:
+                        cols[f] = np.asarray(
+                            [getattr(mp, f) for mp in maps], np.float32)
+                    yield key, cols
+
+            def update(key, off, out, lo, hi):
+                # min-energy valid row; strict < keeps the first index on
+                # ties, within a tile (np.argmin) and across tiles alike
+                entry = live[key]
+                e = np.where(out["valid"][lo:hi],
+                             out["energy_pj"][lo:hi], np.inf)
+                i = int(np.argmin(e))
+                st = best.get(key)
+                if np.isfinite(e[i]) and (st is None or e[i] < st[0]):
+                    best[key] = [e[i], {k: out[k][lo + i]
+                                        for k in _OUT_KEYS},
+                                 entry[0][off + i]]
+                entry[1] -= hi - lo
+                if entry[1] == 0:              # group fully reduced
+                    del live[key]
+
+            self._stream_batches(fn, groups(), update)
+            for key, (g, c) in todo.items():
+                st = best.get(key)
+                if st is None:                 # should not happen: mappings
                     met = evaluate(g, c, order_mode)   # are pre-validated
                 else:
-                    i = int(np.argmin(np.where(ok, e, np.inf)))
-                    met = metrics_from_row(
-                        g.ops, {k: out[k][lo + i] for k in _OUT_KEYS},
-                        mapping=maps[i])
+                    met = metrics_from_row(g.ops, st[1], mapping=st[2])
                 self._put(key, met)
                 results[key] = met
         return [results[k] for k in keys]
@@ -354,35 +524,47 @@ class SweepEngine:
                 todo.setdefault(key, g)
 
         if todo:
-            spaces = [(key, g, enumerate_baseline_space(g))
-                      for key, g in todo.items()]
-            names = BASE_TILE_FIELDS + ("M", "N", "K")
-            batch = {f: np.concatenate([np.asarray(s[f]) for _, _, s in
-                                        spaces]) for f in names}
-            n = batch["mt"].shape[0]
             fn = _jit_kernel("base", mesh=self.mesh)
-            out = _run_padded(fn, batch, n, self.n_shards)
-            lo = 0
-            for key, g, space in spaces:
-                hi = lo + np.asarray(space["mt"]).shape[0]
-                t = out["time_ns"][lo:hi]
-                e = out["energy_pj"][lo:hi]
+            names = BASE_TILE_FIELDS + ("M", "N", "K")
+            best: dict = {}          # key -> [time, energy, out_row]
+
+            def groups():
+                # one group per GEMM's full tile grid (the ~1300-point
+                # search space), enumerated lazily as tiles fill
+                for key, g in todo.items():
+                    space = enumerate_baseline_space(g)
+                    yield key, {f: np.asarray(space[f], np.float32)
+                                for f in names}
+
+            def update(key, off, out, lo, hi):
+                # lexicographic (time, energy) among valid rows, first
+                # index on ties — the scalar search's iteration-order
+                # tie-break.  Strict-improvement replacement preserves it
+                # across tiles (earlier tiles hold earlier rows).
                 ok = out["valid"][lo:hi]
-                if not ok.any():
+                t = np.where(ok, out["time_ns"][lo:hi], np.inf)
+                tmin = t.min()
+                if not np.isfinite(tmin):
+                    return                       # no valid row in segment
+                cand = np.where(t == tmin,
+                                np.where(ok, out["energy_pj"][lo:hi],
+                                         np.inf), np.inf)
+                i = int(np.argmin(cand))
+                st = best.get(key)
+                if (st is None or tmin < st[0]
+                        or (tmin == st[0] and cand[i] < st[1])):
+                    best[key] = [tmin, cand[i],
+                                 {k: out[k][lo + i] for k in _OUT_KEYS}]
+
+            self._stream_batches(fn, groups(), update)
+            for key, g in todo.items():
+                st = best.get(key)
+                if st is None:
                     met = evaluate_baseline(g)
                 else:
-                    # lexicographic (time, energy), first index on ties —
-                    # the scalar search's iteration-order tie-break
-                    t = np.where(ok, t, np.inf)
-                    tmin = t.min()
-                    cand = np.where(t == tmin, np.where(ok, e, np.inf),
-                                    np.inf)
-                    i = int(np.argmin(cand))
-                    met = metrics_from_row(
-                        g.ops, {k: out[k][lo + i] for k in _OUT_KEYS})
+                    met = metrics_from_row(g.ops, st[2])
                 self._put(key, met)
                 results[key] = met
-                lo = hi
         return [results[k] for k in keys]
 
 

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run driver (deliverable e).
 
 Lowers + compiles train_step / serve_step for every (arch x input-shape x
@@ -25,6 +22,10 @@ Usage:
       --mesh single --out results/dryrun
   python -m repro.launch.dryrun --all --out results/dryrun
 """
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import dataclasses
 import json

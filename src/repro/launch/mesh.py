@@ -48,7 +48,13 @@ def single_pod_mesh_from(devices):
 def row_mesh(devices=None, axis: str = "rows"):
     """1-D mesh over `devices` (default: all) for row-sharded batch
     evaluation — the sweep engine splits its flattened (GEMM, config,
-    mapping) row batches over this axis (repro.core.sweep)."""
+    mapping) row batches over this axis (repro.core.sweep).
+
+    `jax.devices()` is the GLOBAL device list, so in a multi-process
+    jax.distributed job the default mesh already spans every host; the
+    engine then routes evaluation through the multi-host path
+    (launch.distributed: per-host shard materialization + output
+    all-gather).  Pass `jax.local_devices()` to force a one-host mesh."""
     devices = list(devices if devices is not None else jax.devices())
     return make_mesh_from_devices(devices, (len(devices),), (axis,))
 

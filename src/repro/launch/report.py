@@ -103,6 +103,12 @@ def planner_cache_table(cells: list[dict]) -> str:
         engine_cell = f"{eng['hits']}h/{eng['misses']}m size={eng['size']}"
         if backends:
             engine_cell += f" [{backends}]"
+        # streaming-enumerator accounting (cells predating chunked
+        # evaluation, or whole-batch engines, carry no tile count)
+        ch = eng.get("chunks") or {}
+        if ch.get("chunk_rows"):
+            engine_cell += (f" chunks={ch.get('evaluated', 0)}"
+                            f"@{ch['chunk_rows']}rows")
         lines.append(
             f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
             f"{s['cim_fraction']:.2f} | {routed} | "
@@ -110,6 +116,39 @@ def planner_cache_table(cells: list[dict]) -> str:
             f"{p['plan_hits']}/{p['plan_misses']} | "
             f"{engine_cell} |")
     return "\n".join(lines) if found else "(no decode cells with planner telemetry)"
+
+
+def shard_balance_table(cells: list[dict]) -> str:
+    """Per-host telemetry of distributed sweep runs: each process's
+    engine cache hit/miss (SPMD — every host keeps its own LRU with
+    identical contents, so a divergent column is a bug signal) plus the
+    row shard balance of the padded batches (a skewed balance means an
+    uneven device set is bottlenecked on its largest host).
+
+    Cells whose planner block ran on a single-host mesh carry
+    `cache.distributed = None` and are skipped."""
+    lines = ["| arch | shape | host | procs | devices | host cache | "
+             "rows/process |",
+             "|---|---|---|---|---|---|---|"]
+    found = False
+    for c in cells:
+        p = c.get("planner")
+        if c.get("status") != "ok" or not p:
+            continue
+        eng = p.get("cache") or {}
+        d = eng.get("distributed")
+        if not d:
+            continue
+        found = True
+        balance = " ".join(f"p{k}:{v}" for k, v in
+                           sorted(d.get("shard_balance", {}).items()))
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | "
+            f"p{d['process_index']}/{d['processes']} | "
+            f"{d['processes']} | {d.get('mesh_devices', '?')} | "
+            f"{eng['hits']}h/{eng['misses']}m | {balance} |")
+    return ("\n".join(lines) if found
+            else "(no distributed sweep telemetry in these cells)")
 
 
 def summarize(cells: list[dict]) -> dict:
@@ -143,5 +182,7 @@ if __name__ == "__main__":
     print(roofline_table(cells, "multi"))
     print("\n## Planner (decode cells: what/when/where + sweep cache)\n")
     print(planner_cache_table(cells))
+    print("\n## Distributed sweeps (per-host cache + shard balance)\n")
+    print(shard_balance_table(cells))
     print("\n## Summary\n")
     print(json.dumps(summarize(cells), indent=1))

@@ -102,10 +102,17 @@ def main():
         "sample_row": [int(x) for x in
                        jax.device_get(out[0]).reshape(-1)[:16]],
         # what/when/where gates + planner-cache hit/miss telemetry (LRU
-        # sizing is driven by these counters under production traffic)
+        # sizing is driven by these counters under production traffic).
+        # The engine block inside carries the streaming-chunk accounting
+        # and, on a multi-host mesh, the per-process shard balance.
         "kernel_plan": {lab: bool(d.use_cim) for lab, d in plan.items()},
         "planner_cache": sess.plan_cache_telemetry,
     }
+    if jax.process_count() > 1:
+        # pod-scale run: record which host printed this report and the
+        # process topology next to the per-host cache counters above
+        from . import distributed as dist
+        report["distributed"] = dist.distributed_info()
     if args.quantize:
         # per-label executed routes + gated-vs-ungated decode throughput:
         # the ungated session keeps the same INT8 weights, so the

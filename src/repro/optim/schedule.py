@@ -1,4 +1,7 @@
-"""LR schedules."""
+"""Learning-rate schedules (jnp-traceable, usable inside jitted steps).
+
+`linear_warmup_cosine` is the production default: linear ramp over
+`warmup` steps, cosine decay to `min_frac * base_lr` by `total`."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -174,7 +174,10 @@ class ServeSession:
         """sweep.cache_info() telemetry of this session's kernel_plan
         build (triggers the build on first access): how many of the
         session's GEMM verdicts were served from the process-wide LRU vs
-        freshly evaluated, plus the engine-wide counters."""
+        freshly evaluated, plus the engine-wide counters.  The embedded
+        `engine` block also carries the streaming-chunk accounting and —
+        for sessions planned on a multi-host mesh — the per-process
+        shard balance (rendered by launch.report.shard_balance_table)."""
         _ = self.kernel_plan
         return self._plan_cache_telemetry
 

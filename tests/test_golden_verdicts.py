@@ -39,9 +39,17 @@ def _grid():
                 yield arch, sname, g
 
 
-def _verdict_rows(backend: str) -> list[dict]:
+def _verdict_rows(backend: str = "vectorized", plan=None) -> list[dict]:
+    """Verdict rows of the full grid, in golden-CSV field conventions.
+
+    `plan` overrides how the decisions are produced (gemms -> decisions)
+    — the distributed parity worker routes through its multi-host engine
+    here, so the formatting the bitwise comparison depends on has
+    exactly one definition."""
     entries = list(_grid())
-    decisions = plan_workload([g for _, _, g in entries], backend=backend)
+    gemms = [g for _, _, g in entries]
+    decisions = (plan(gemms) if plan is not None
+                 else plan_workload(gemms, backend=backend))
     return [{"arch": arch, "shape": sname, "label": g.label,
              "M": str(g.M), "N": str(g.N), "K": str(g.K),
              "best_energy": d.best_energy,
