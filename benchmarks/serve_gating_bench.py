@@ -18,9 +18,12 @@ of replacing the trusted trajectory entry, and running the module
 directly (as CI does) then exits nonzero.
 
 Run directly:  PYTHONPATH=src python -m benchmarks.serve_gating_bench
+(--new-tokens/--repeats/--warmup tune the shared timing helper,
+repro.launch.serve.steady_decode_tokens_per_s).
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -48,7 +51,8 @@ NEW_TOKENS = 16
 PARITY_ATOL = 0.05
 
 
-def serve_gating_speed(write_json: bool = True):
+def serve_gating_speed(write_json: bool = True, new_tokens: int = NEW_TOKENS,
+                       repeats: int = 3, warmup: int = 0):
     rc = RunConfig(attn_impl="naive", remat=False)
     rows, per_arch = [], {}
     all_parity_ok = True
@@ -57,7 +61,7 @@ def serve_gating_speed(write_json: bool = True):
         params = init(jax.random.PRNGKey(0), cfg)
         prompt = jax.random.randint(jax.random.PRNGKey(1),
                                     (batch, PROMPT_LEN), 0, cfg.vocab)
-        max_len = PROMPT_LEN + NEW_TOKENS + 2
+        max_len = PROMPT_LEN + new_tokens + 2
         gated = ServeSession(cfg, rc, params, max_len=max_len,
                              batch=batch, quantize=True)
         ungated = ServeSession(cfg, rc, params, max_len=max_len,
@@ -73,7 +77,8 @@ def serve_gating_speed(write_json: bool = True):
         # interleaved sampling (launch.serve helper): contention hits
         # gated and ungated symmetrically, jit compile excluded
         tps_g, tps_u = steady_decode_tokens_per_s(
-            (gated, ungated), prompt, NEW_TOKENS)
+            (gated, ungated), prompt, new_tokens,
+            repeats=repeats, warmup=warmup)
         routes = gated.route_report()
         row = {"arch": cfg.name, "batch": batch,
                "tokens_per_s_gated": round(tps_g, 1),
@@ -92,11 +97,21 @@ def serve_gating_speed(write_json: bool = True):
         "archs": per_arch,
         "parity_ok": all_parity_ok,
         "parity_atol": PARITY_ATOL,
-        "new_tokens": NEW_TOKENS,
+        "new_tokens": new_tokens,
         "provenance": _provenance(),
     }
     if write_json:
         out = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+        # preserve the traffic bench's block if one is already recorded
+        # (the two benches share the file; each owns its keys)
+        if os.path.exists(out):
+            try:
+                with open(out) as f:
+                    prev = json.load(f)
+                if "traffic" in prev:
+                    derived["traffic"] = prev["traffic"]
+            except (json.JSONDecodeError, OSError):
+                pass
         if not all_parity_ok:
             # quarantine: a routing-changes-the-math run must not replace
             # the trusted trajectory entry
@@ -107,7 +122,19 @@ def serve_gating_speed(write_json: bool = True):
 
 
 if __name__ == "__main__":
-    _, derived = serve_gating_speed()
+    ap = argparse.ArgumentParser(
+        description="Planner-gated serving benchmark (gated vs ungated "
+                    "INT8 decode).",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter)
+    ap.add_argument("--new-tokens", type=int, default=NEW_TOKENS,
+                    help="decode steps per timed sample")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed samples per session (best is kept)")
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="untimed decode steps per session after prefill")
+    cli = ap.parse_args()
+    _, derived = serve_gating_speed(new_tokens=cli.new_tokens,
+                                    repeats=cli.repeats, warmup=cli.warmup)
     print(json.dumps(derived, indent=1))
     if not derived["parity_ok"]:
         sys.exit("gating parity regression: gated and ungated INT8 decode "

@@ -151,6 +151,39 @@ def shard_balance_table(cells: list[dict]) -> str:
             else "(no distributed sweep telemetry in these cells)")
 
 
+def serve_traffic_table(bench: dict) -> str:
+    """Throughput-vs-latency rows from BENCH_serve.json's `traffic`
+    block (the continuous-batching open-loop bench): one row per
+    arrival rate, TTFT percentiles against engine tokens/s, plus the
+    scheduler health columns (queue depth, slot occupancy, evictions).
+    The fixed-batch reference row anchors the curves against the legacy
+    lockstep session on the same core."""
+    t = bench.get("traffic")
+    if not t:
+        return "(no traffic block in BENCH_serve.json — run " \
+               "benchmarks.serve_traffic_bench)"
+    lines = [f"arch={t['arch']} slots={t['n_slots']} "
+             f"block_size={t['block_size']} "
+             f"requests/rate={t['requests_per_rate']} seed={t['seed']}",
+             "",
+             "| arrival req/s | TTFT p50 | TTFT p95 | engine tok/s | "
+             "req tok/s | occupancy | queue depth | evict |",
+             "|---|---|---|---|---|---|---|---|"]
+    for c in t.get("curves", []):
+        lines.append(
+            f"| {c['arrival_rate_req_per_s']:g} | "
+            f"{fmt_s(c['ttft_p50_s'])} | {fmt_s(c['ttft_p95_s'])} | "
+            f"{c['engine_tokens_per_s']:.1f} | "
+            f"{c['request_tokens_per_s_mean']:.1f} | "
+            f"{c['slot_occupancy_mean']:.2f} | "
+            f"{c['queue_depth_mean']:.2f} | {c['evictions']} |")
+    ref = t.get("fixed_batch_reference_tokens_per_s")
+    if ref is not None:
+        lines.append(f"\nfixed-batch reference (legacy lockstep, "
+                     f"batch={t['n_slots']}): {ref:.1f} tok/s")
+    return "\n".join(lines)
+
+
 def summarize(cells: list[dict]) -> dict:
     ok = [c for c in cells if c["status"] == "ok"]
     skipped = [c for c in cells if c["status"] == "skipped"]
@@ -184,5 +217,11 @@ if __name__ == "__main__":
     print(planner_cache_table(cells))
     print("\n## Distributed sweeps (per-host cache + shard balance)\n")
     print(shard_balance_table(cells))
+    bench_path = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
+    if os.path.exists(bench_path):
+        with open(bench_path) as f:
+            print("\n## Serving traffic (continuous batching, "
+                  "throughput vs latency)\n")
+            print(serve_traffic_table(json.load(f)))
     print("\n## Summary\n")
     print(json.dumps(summarize(cells), indent=1))

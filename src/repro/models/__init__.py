@@ -1,9 +1,9 @@
 """Model zoo: unified LM covering all 10 assigned architectures."""
 from . import attention, layers, mamba2, model, moe
 from .layers import linear, route_trace
-from .model import (decode_step, forward, init, init_cache, loss_fn,
-                    n_periods, period_slots)
+from .model import (decode_step, forward, init, init_cache,
+                    init_paged_cache, loss_fn, n_periods, period_slots)
 
 __all__ = ["init", "forward", "loss_fn", "decode_step", "init_cache",
-           "period_slots", "n_periods", "linear", "route_trace",
-           "attention", "layers", "mamba2", "model", "moe"]
+           "init_paged_cache", "period_slots", "n_periods", "linear",
+           "route_trace", "attention", "layers", "mamba2", "model", "moe"]

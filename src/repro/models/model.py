@@ -332,6 +332,44 @@ def init_cache(cfg: ModelConfig, rc: RunConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_cache(cfg: ModelConfig, rc: RunConfig, n_slots: int,
+                     n_blocks: int, block_size: int,
+                     n_image_tokens: int = 0):
+    """Block-pool KV cache for slot-scheduled continuous batching.
+
+    Attention slots get a shared *pool* of `n_blocks` fixed-size blocks,
+    (periods, n_blocks, block_size, kv_heads, head_dim), instead of one
+    contiguous (batch, max_len) strip per request: each serving slot owns
+    a host-managed list of physical block ids (its block table) and
+    ragged request lengths share one jitted decode executable.  Mamba
+    state / conv carries and cross-attn image KV stay per-slot (they are
+    O(1) in sequence length, nothing to page)."""
+    np_ = n_periods(cfg)
+    kv_dtype = dtype_of(rc.kv_cache_dtype) if rc.kv_cache_dtype != "int8" \
+        else jnp.int8
+    dh, kvh = cfg.head_dim(), cfg.n_kv_heads
+    caches = []
+    for slot in period_slots(cfg):
+        if slot.mixer == "attn":
+            shape = (np_, n_blocks, block_size, kvh, dh)
+            caches.append({"k": jnp.zeros(shape, kv_dtype),
+                           "v": jnp.zeros(shape, kv_dtype)})
+            if rc.kv_cache_dtype == "int8":
+                caches[-1]["k_scale"] = jnp.zeros(
+                    (np_, n_blocks, block_size, kvh), jnp.bfloat16)
+                caches[-1]["v_scale"] = jnp.zeros(
+                    (np_, n_blocks, block_size, kvh), jnp.bfloat16)
+        elif slot.mixer == "cross":
+            shape = (np_, n_slots, n_image_tokens, kvh, dh)
+            caches.append({"k": jnp.zeros(shape, jnp.bfloat16),
+                           "v": jnp.zeros(shape, jnp.bfloat16)})
+        else:
+            sst, scv = mamba_cache_shapes(cfg, n_slots)
+            caches.append({"state": jnp.zeros((np_,) + sst, jnp.float32),
+                           "conv": jnp.zeros((np_,) + scv, jnp.bfloat16)})
+    return caches
+
+
 def _quantize_kv(t):
     scale = jnp.max(jnp.abs(t), axis=-1, keepdims=True) / 127.0 + 1e-8
     return (jnp.round(t / scale).astype(jnp.int8),
@@ -342,16 +380,68 @@ def _dequantize_kv(q, scale):
     return q.astype(jnp.bfloat16) * scale[..., None]
 
 
+def _paged_write(pool, new, pos, block_tables, active):
+    """Scatter one row per slot into a block pool.
+
+    pool: (n_blocks, block_size, ...); new: (b, ...); pos: (b,) logical
+    positions; block_tables: (b, max_blocks) physical block ids.
+    Inactive slots write out-of-bounds and are dropped (their KV must not
+    clobber live blocks)."""
+    n_blocks, bs = pool.shape[0], pool.shape[1]
+    blk = jnp.take_along_axis(block_tables, (pos // bs)[:, None],
+                              axis=1)[:, 0]
+    phys = blk * bs + pos % bs
+    if active is not None:
+        phys = jnp.where(active, phys, n_blocks * bs)     # OOB -> drop
+    flat = pool.reshape((n_blocks * bs,) + pool.shape[2:])
+    flat = flat.at[phys].set(new.astype(pool.dtype), mode="drop")
+    return flat.reshape(pool.shape)
+
+
+def _paged_view(pool, block_tables):
+    """Gather each slot's logical KV strip from the pool:
+    (n_blocks, bs, ...) + (b, max_blocks) -> (b, max_blocks * bs, ...)."""
+    v = pool[block_tables]
+    return v.reshape((v.shape[0], v.shape[1] * v.shape[2]) + v.shape[3:])
+
+
+def _mask_rows(new, old, active):
+    """Per-slot select: active slots take the updated cache row, evicted /
+    free slots keep (frozen) state so garbage tokens can't corrupt them."""
+    if active is None:
+        return new
+    m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new.astype(old.dtype), old)
+
+
 # --- decode -----------------------------------------------------------------------
 
 def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
-                rc: RunConfig, plan=None):
+                rc: RunConfig, plan=None, active=None, block_tables=None):
     """One decode step.  tokens: (b, 1) (audio: (b, 1, nb)); pos: () int32
-    current length (uniform across batch).  Returns (logits, new_cache).
+    current length (uniform across batch) OR (b,) int32 per-slot lengths
+    (ragged, continuous batching).  Returns (logits, new_cache).
     `plan` is the jit-static KernelPlanTable: gated projection labels
-    lower to the INT8 Pallas path inside the one compiled step."""
+    lower to the INT8 Pallas path inside the one compiled step.
+
+    Continuous-batching extensions (all jit-dynamic — one executable):
+      * ragged `pos` (b,): each slot attends/ropes at its own length;
+      * `active` (b,) bool: cache writes of inactive (free / draining)
+        slots are masked out, so join/evict never retraces or corrupts
+        neighbouring requests;
+      * `block_tables` (b, max_blocks) int32: attention KV lives in the
+        block pool laid out by `init_paged_cache`; reads gather the
+        slot's logical strip, writes scatter one row into its current
+        block.  Required whenever `pos` is ragged and the arch has
+        attention slots."""
     slots = period_slots(cfg)
     b = tokens.shape[0]
+    ragged = jnp.ndim(pos) == 1
+    if ragged and block_tables is None and any(s.mixer == "attn"
+                                              for s in slots):
+        raise ValueError(
+            "ragged per-slot positions need a paged KV cache: pass "
+            "block_tables (see init_paged_cache) for attention archs")
     if cfg.family == "audio":
         x = jnp.sum(jax.vmap(lambda e, t: e[t], in_axes=(0, 2),
                              out_axes=2)(params["embed"], tokens), axis=2)
@@ -370,7 +460,9 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
                 y, (st, cv) = mamba_apply(
                     sp["mamba"], h, cfg, state=cache_s["state"],
                     conv_carry=cache_s["conv"], decode=True, plan=plan)
-                new_cache.append({"state": st, "conv": cv})
+                new_cache.append(
+                    {"state": _mask_rows(st, cache_s["state"], active),
+                     "conv": _mask_rows(cv, cache_s["conv"], active)})
             elif slot.mixer == "cross":
                 q = _cross_q_proj(sp, h, b, 1, nh, dh, plan)
                 o = decode_attend(
@@ -381,9 +473,48 @@ def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
                 new_cache.append(cache_s)
             else:
                 q, k, v = qkv_proj(sp["attn"], h, nh, kvh, dh, plan)
-                pvec = jnp.full((b, 1), pos, jnp.int32)
+                pvec = (pos[:, None] if ragged
+                        else jnp.full((b, 1), pos, jnp.int32))
                 q = apply_rope(q, pvec, cfg.rope_theta)
                 k = apply_rope(k, pvec, cfg.rope_theta)
+                if block_tables is not None:
+                    # paged path: scatter this token's KV row into the
+                    # slot's current block, then gather its logical strip
+                    if rc.kv_cache_dtype == "int8":
+                        kq, ks = _quantize_kv(k)
+                        vq, vs = _quantize_kv(v)
+                        ck = _paged_write(cache_s["k"], kq[:, 0], pos,
+                                          block_tables, active)
+                        cv = _paged_write(cache_s["v"], vq[:, 0], pos,
+                                          block_tables, active)
+                        cks = _paged_write(cache_s["k_scale"], ks[:, 0],
+                                           pos, block_tables, active)
+                        cvs = _paged_write(cache_s["v_scale"], vs[:, 0],
+                                           pos, block_tables, active)
+                        kd = _dequantize_kv(_paged_view(ck, block_tables),
+                                            _paged_view(cks, block_tables))
+                        vd = _dequantize_kv(_paged_view(cv, block_tables),
+                                            _paged_view(cvs, block_tables))
+                        new_cache.append({"k": ck, "v": cv,
+                                          "k_scale": cks, "v_scale": cvs})
+                    else:
+                        ck = _paged_write(cache_s["k"], k[:, 0], pos,
+                                          block_tables, active)
+                        cv = _paged_write(cache_s["v"], v[:, 0], pos,
+                                          block_tables, active)
+                        kd = _paged_view(ck, block_tables)
+                        vd = _paged_view(cv, block_tables)
+                        new_cache.append({"k": ck, "v": cv})
+                    lens = (pos + 1 if ragged
+                            else jnp.full((b,), pos + 1, jnp.int32))
+                    o = decode_attend(q, kd, vd, lens,
+                                      window=cfg.sliding_window,
+                                      grouped=rc.gqa_einsum)
+                    y = attn_out_proj(sp["attn"],
+                                      o.reshape(b, 1, nh * dh), plan)
+                    x = x + y
+                    x, _ = _apply_ffn(slot, sp, x, cfg, plan)
+                    continue
                 if rc.kv_cache_dtype == "int8":
                     kq, ks = _quantize_kv(k)
                     vq, vs = _quantize_kv(v)

@@ -1,6 +1,13 @@
-"""Serving: prefill + batched KV-cache decode, planner-gated execution."""
+"""Serving: one immutable compiled decode core (DecodeCore) under two
+request layers — the legacy fixed-batch ServeSession and the
+slot-scheduled, paged-KV ContinuousBatchingEngine — all planner-gated."""
+from .core import DecodeCore, sample_token
 from .engine import (CIM_ROUTE, ServeSession, cim_fraction, decode_routes,
                      make_prefill, make_serve_step)
+from .scheduler import (BlockAllocator, ContinuousBatchingEngine, Request,
+                        poisson_arrivals, synthetic_requests)
 
-__all__ = ["ServeSession", "make_prefill", "make_serve_step",
-           "decode_routes", "cim_fraction", "CIM_ROUTE"]
+__all__ = ["ServeSession", "DecodeCore", "ContinuousBatchingEngine",
+           "Request", "BlockAllocator", "make_prefill", "make_serve_step",
+           "decode_routes", "cim_fraction", "sample_token",
+           "synthetic_requests", "poisson_arrivals", "CIM_ROUTE"]

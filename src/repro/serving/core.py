@@ -1,0 +1,228 @@
+"""The immutable compiled core of the serving stack.
+
+`DecodeCore` owns everything that must be frozen *before* jitting and
+then never changes while requests stream through: the model/run configs,
+the (optionally INT8-quantized) parameters, the What/When/Where verdicts
+as a jit-static `KernelPlanTable`, and the jitted decode executables.
+The scheduler layer (repro.serving.scheduler) and the legacy fixed-batch
+`ServeSession` (repro.serving.engine) are both thin mutable shells over
+one core — requests join and leave, the core never retraces.
+
+Two executables live here, each compiled exactly once:
+
+  * `step(params, cache, tokens, pos)` — the legacy fixed-batch step
+    (scalar uniform position), what the dry-run lowers and ServeSession
+    drives;
+  * `batch_step(params, cache, tokens, pos, active, block_tables)` — the
+    continuous-batching step: ragged per-slot positions, an active-slot
+    mask, and a paged KV block pool (models.model.init_paged_cache).
+    All four scheduler-side inputs are jit-*dynamic*, so slot churn under
+    live traffic hits the same compiled program every step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models import decode_step
+from ..models.layers import route_trace
+from ..quant import (KernelPlanTable, quantize_model_params,
+                     strip_model_prefix)
+
+
+def _token_struct(cfg: ModelConfig, batch: int):
+    shape = (batch, 1) + ((cfg.audio.n_codebooks,)
+                          if cfg.family == "audio" else ())
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def sample_token(cfg: ModelConfig, logits, temperature: float, key):
+    """Greedy / temperature sampling of the next token from step logits.
+
+    One definition shared by the fixed-batch session and the continuous
+    engine, so the two paths cannot drift.  Returns tokens shaped for
+    feeding back into the decode step ((b, 1), audio: (b, 1, nb))."""
+    last = logits[:, -1]
+    if temperature <= 0.0:
+        tok = jnp.argmax(last, axis=-1)
+    else:
+        tok = jax.random.categorical(key, last / temperature)
+    if cfg.family == "audio":
+        return tok[:, None, :] if tok.ndim == 2 else tok[:, None]
+    return tok[:, None].astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class DecodeCore:
+    """Frozen compiled core: params + plan + the jitted decode programs.
+
+    quantize=True turns the planner verdicts into the execution policy:
+    projection weights are INT8-quantized at init, the kernel plan is
+    built eagerly (before jitting), and both jitted steps close over the
+    static KernelPlanTable.  gated=False keeps the quantized weights but
+    forces every label onto the standard path — the parity baseline for
+    the gated program (identical numerics source, routing the only
+    difference)."""
+    cfg: ModelConfig
+    rc: RunConfig
+    params: Any
+    quantize: bool = False
+    gated: bool = True
+    # decode shape the planner reasons about (batch is what matters for
+    # the paper's M=1 pathology; ServeSession passes its own)
+    plan_batch: int = 8
+    plan_max_len: int = 1024
+
+    def __post_init__(self):
+        self._kernel_plan = None
+        self._plan_cache_telemetry = None
+        self._plan_lock = threading.Lock()
+        self._verdict_table = None
+        self._batch_step = None
+        self.plan_table = None
+        if self.quantize:
+            # plan BEFORE jit: the verdicts are static inputs of the one
+            # lowered decode program, not runtime state
+            table = self.verdict_table
+            self.plan_table = table if self.gated else table.ungated()
+            self.params = quantize_model_params(self.params)
+        cfg, rc, plan = self.cfg, self.rc, self.plan_table
+        self._step = jax.jit(
+            lambda params, cache, tokens, pos:
+            decode_step(params, cache, tokens, pos, cfg, rc, plan=plan))
+
+    # --- planner plumbing (the session-level API, now core-owned) ------
+
+    @property
+    def kernel_plan(self) -> dict:
+        """label -> planner Decision for this core's decode GEMMs.
+
+        Computed lazily on first access through the batched sweep planner
+        (plan_workload, backend="vectorized"); the sweep engine's LRU
+        cache makes repeat cores over the same shapes free.  The build is
+        locked per core: concurrent first accesses must not double-build
+        (the second build would be all-hits and overwrite the real
+        telemetry)."""
+        if self._kernel_plan is None:
+            with self._plan_lock:
+                if self._kernel_plan is None:
+                    self._build_kernel_plan()
+        return self._kernel_plan
+
+    def _build_kernel_plan(self) -> None:
+        from ..configs.base import ShapeConfig
+        from ..core.llm_workloads import gemms_of_model
+        from ..core.planner import plan_workload
+        from ..core.sweep import measured_cache_delta
+        # the planner reasons about decode-shaped GEMMs; seq_len enters
+        # the taxonomy only through the shape tag, batch is what matters
+        shape = ShapeConfig("serve", self.plan_max_len, self.plan_batch,
+                            "decode")
+        gemms = gemms_of_model(self.cfg, shape)
+        decisions, self._plan_cache_telemetry = measured_cache_delta(
+            lambda: plan_workload(gemms, backend="vectorized"))
+        self._kernel_plan = {d.gemm.label: d for d in decisions}
+
+    @property
+    def plan_cache_telemetry(self) -> dict:
+        """sweep.cache_info() telemetry of this core's kernel_plan build
+        (triggers the build on first access): how many of the GEMM
+        verdicts were served from the process-wide LRU vs freshly
+        evaluated, plus the engine-wide counters (streaming-chunk
+        accounting and, on a multi-host mesh, per-process shard
+        balance)."""
+        _ = self.kernel_plan
+        return self._plan_cache_telemetry
+
+    @property
+    def verdict_table(self) -> KernelPlanTable:
+        """The raw verdicts as a KernelPlanTable (short labels).  Unlike
+        `plan_table` it is never force-ungated, and it exists for
+        non-quantized cores too (lazy plan build)."""
+        if self._verdict_table is None:
+            self._verdict_table = KernelPlanTable.from_decisions(
+                self.kernel_plan.values(), model_name=self.cfg.name)
+        return self._verdict_table
+
+    def use_cim_for(self, label: str) -> bool:
+        """The planner's "when" gate for one GEMM (feeds
+        repro.quant.planned_linear's use_cim_path).  Accepts full
+        ("<model> Wq") or short ("Wq") labels; unknown labels raise
+        KeyError with the known-label list (the KernelPlanTable
+        contract) — model-side label drift must not silently disable
+        gating."""
+        return self.verdict_table.use_cim(
+            strip_model_prefix(label, self.cfg.name))
+
+    # --- the two compiled programs -------------------------------------
+
+    def step(self, cache, tokens, pos):
+        """Legacy fixed-batch decode step (uniform scalar position)."""
+        return self._step(self.params, cache, tokens, pos)
+
+    @property
+    def batch_step(self):
+        """The continuous-batching executable, jitted on first use:
+        (params, cache, tokens, pos_vec, active, block_tables) ->
+        (logits, cache).  pos_vec (b,) int32, active (b,) bool and
+        block_tables (b, max_blocks) int32 are dynamic — join/evict/
+        ragged lengths never retrace."""
+        if self._batch_step is None:
+            cfg, rc, plan = self.cfg, self.rc, self.plan_table
+            self._batch_step = jax.jit(
+                lambda params, cache, tokens, pos, active, block_tables:
+                decode_step(params, cache, tokens, pos, cfg, rc,
+                            plan=plan, active=active,
+                            block_tables=block_tables))
+        return self._batch_step
+
+    @staticmethod
+    def _executables(fn) -> int | None:
+        probe = getattr(fn, "_cache_size", None)
+        return probe() if probe is not None else None
+
+    @property
+    def decode_executables(self) -> int | None:
+        """Programs compiled by the fixed-batch step (no-retrace gate:
+        exactly 1 after any traffic).  None if the private jax jit-cache
+        probe is unavailable."""
+        return self._executables(self._step)
+
+    @property
+    def batch_decode_executables(self) -> int | None:
+        """Programs compiled by the continuous-batching step — the
+        tentpole no-retrace gate for slot churn under live traffic."""
+        if self._batch_step is None:
+            return 0
+        return self._executables(self._batch_step)
+
+    def route_report(self, batch: int, max_len: int,
+                     n_image_tokens: int = 0) -> dict:
+        """label -> {route, use_cim, what, where} as actually lowered by
+        the jitted decode step (abstract trace, no compute)."""
+        from ..models import init_cache
+        cache = jax.eval_shape(
+            lambda: init_cache(self.cfg, self.rc, batch, max_len,
+                               n_image_tokens=n_image_tokens))
+        cfg, rc, plan = self.cfg, self.rc, self.plan_table
+        with route_trace() as records:
+            jax.eval_shape(
+                lambda p, c, t, i: decode_step(p, c, t, i, cfg, rc,
+                                               plan=plan),
+                self.params, cache, _token_struct(cfg, batch),
+                jax.ShapeDtypeStruct((), jnp.int32))
+        report = {}
+        for r in records:
+            entry = (self.plan_table.entry(r["label"])
+                     if self.plan_table is not None else None)
+            report[r["label"]] = {
+                "route": r["route"],
+                "use_cim": entry.use_cim if entry else False,
+                "what": entry.what if entry else "baseline",
+                "where": entry.where if entry else "PE"}
+        return report

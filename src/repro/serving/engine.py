@@ -2,8 +2,15 @@
 
 `make_serve_step` builds the jit/pjit-able single-token decode step that
 the multi-pod dry-run lowers for decode_32k / long_500k shapes.  The
-engine itself adds batched request handling, greedy/temperature sampling,
-and prefill-vs-full-forward consistency (tested).
+serving stack splits into two layers on top of it:
+
+  * `DecodeCore` (repro.serving.core) — the immutable compiled core:
+    params, jit-static KernelPlanTable, and the jitted decode
+    executables, frozen before any traffic;
+  * the mutable request layers — the legacy fixed-batch `ServeSession`
+    below (one cache, one uniform position, greedy/temperature
+    sampling), and the slot-scheduled `ContinuousBatchingEngine`
+    (repro.serving.scheduler) for ragged request streams.
 
 Kernel gating: `ServeSession.kernel_plan` runs the What/When/Where
 planner (batched sweep backend — repro.core.sweep, one fused device call,
@@ -22,17 +29,16 @@ the route each label actually lowered to.
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig, RunConfig
-from ..models import decode_step, forward, init, init_cache
-from ..models.layers import CIM_ROUTE, route_trace
-from ..quant import (KernelPlanTable, quantize_model_params,
-                     strip_model_prefix)
+from ..models import decode_step, forward, init_cache
+from ..models.layers import CIM_ROUTE
+from ..quant import KernelPlanTable
+from .core import DecodeCore, _token_struct, sample_token
 
 
 def make_serve_step(cfg: ModelConfig, rc: RunConfig,
@@ -72,12 +78,6 @@ def cim_fraction(routes: dict) -> float:
     return sum(v == CIM_ROUTE for v in vals) / max(1, len(vals))
 
 
-def _token_struct(cfg: ModelConfig, batch: int):
-    shape = (batch, 1) + ((cfg.audio.n_codebooks,)
-                          if cfg.family == "audio" else ())
-    return jax.ShapeDtypeStruct(shape, jnp.int32)
-
-
 def decode_routes(cfg: ModelConfig, rc: RunConfig, plan: KernelPlanTable,
                   batch: int, max_len: int,
                   n_image_tokens: int = 0) -> dict:
@@ -87,6 +87,9 @@ def decode_routes(cfg: ModelConfig, rc: RunConfig, plan: KernelPlanTable,
     allocation, works for full production configs) and traces the step
     under `route_trace`; the result is exactly what the jitted program
     lowers, per projection label.  Used by the dry-run decode cells."""
+    from ..models import init
+    from ..models.layers import route_trace
+    from ..quant import quantize_model_params
     step = make_serve_step(cfg, rc, plan)
 
     def run(key):
@@ -103,7 +106,11 @@ def decode_routes(cfg: ModelConfig, rc: RunConfig, plan: KernelPlanTable,
 
 @dataclasses.dataclass
 class ServeSession:
-    """Minimal batched serving session (greedy or temperature sampling).
+    """Minimal fixed-batch serving session (greedy or temperature
+    sampling): all `batch` lanes advance in lockstep at one uniform
+    position over one contiguous KV cache.  For ragged request streams
+    (per-request join/evict, paged KV) use
+    repro.serving.ContinuousBatchingEngine over the same DecodeCore.
 
     quantize=True turns the planner verdicts into the execution policy:
     projection weights are INT8-quantized at init, the kernel plan is
@@ -122,111 +129,63 @@ class ServeSession:
     gated: bool = True
 
     def __post_init__(self):
+        self.core = DecodeCore(self.cfg, self.rc, self.params,
+                               quantize=self.quantize, gated=self.gated,
+                               plan_batch=self.batch,
+                               plan_max_len=self.max_len)
+        self.params = self.core.params       # quantized if quantize=True
+        self.plan_table = self.core.plan_table
+        self._step = self.core._step
         self.cache = init_cache(self.cfg, self.rc, self.batch,
                                 self.max_len,
                                 n_image_tokens=self.n_image_tokens)
         self.pos = 0
-        self._kernel_plan = None
-        self._plan_cache_telemetry = None
-        self._plan_lock = threading.Lock()
-        self._verdict_table = None
-        self.plan_table = None
-        if self.quantize:
-            # plan BEFORE jit: the verdicts are static inputs of the one
-            # lowered decode program, not runtime state
-            table = self.verdict_table
-            self.plan_table = table if self.gated else table.ungated()
-            self.params = quantize_model_params(self.params)
-        self._step = jax.jit(make_serve_step(self.cfg, self.rc,
-                                             self.plan_table))
+
+    # --- planner plumbing: delegated to the compiled core --------------
 
     @property
     def kernel_plan(self) -> dict:
-        """label -> planner Decision for this session's decode GEMMs.
+        """label -> planner Decision for this session's decode GEMMs
+        (lazy; LRU-cached across sessions — see DecodeCore.kernel_plan)."""
+        return self.core.kernel_plan
 
-        Computed lazily on first access through the batched sweep planner
-        (plan_workload, backend="vectorized"); the sweep engine's LRU
-        cache makes repeat sessions over the same shapes free.  The build
-        is locked per session: concurrent first accesses must not
-        double-build (the second build would be all-hits and overwrite
-        the real telemetry)."""
-        if self._kernel_plan is None:
-            with self._plan_lock:
-                if self._kernel_plan is None:
-                    self._build_kernel_plan()
-        return self._kernel_plan
-
-    def _build_kernel_plan(self) -> None:
-        from ..configs.base import ShapeConfig
-        from ..core.llm_workloads import gemms_of_model
-        from ..core.planner import plan_workload
-        from ..core.sweep import measured_cache_delta
-        shape = ShapeConfig("serve", self.max_len, self.batch, "decode")
-        gemms = gemms_of_model(self.cfg, shape)
-        # hit/miss delta of THIS plan build plus the engine-wide
-        # totals: production traffic traces drive cache sizing
-        decisions, self._plan_cache_telemetry = measured_cache_delta(
-            lambda: plan_workload(gemms, backend="vectorized"))
-        self._kernel_plan = {d.gemm.label: d for d in decisions}
+    @property
+    def _kernel_plan(self):
+        return self.core._kernel_plan
 
     @property
     def plan_cache_telemetry(self) -> dict:
         """sweep.cache_info() telemetry of this session's kernel_plan
-        build (triggers the build on first access): how many of the
-        session's GEMM verdicts were served from the process-wide LRU vs
-        freshly evaluated, plus the engine-wide counters.  The embedded
-        `engine` block also carries the streaming-chunk accounting and —
-        for sessions planned on a multi-host mesh — the per-process
-        shard balance (rendered by launch.report.shard_balance_table)."""
-        _ = self.kernel_plan
-        return self._plan_cache_telemetry
+        build (triggers the build on first access) — see
+        DecodeCore.plan_cache_telemetry."""
+        return self.core.plan_cache_telemetry
 
     @property
     def verdict_table(self) -> KernelPlanTable:
         """This session's raw verdicts as a KernelPlanTable (short
         labels).  Unlike `plan_table` it is never force-ungated, and it
         exists for non-quantized sessions too (lazy plan build)."""
-        if self._verdict_table is None:
-            self._verdict_table = KernelPlanTable.from_decisions(
-                self.kernel_plan.values(), model_name=self.cfg.name)
-        return self._verdict_table
+        return self.core.verdict_table
 
     def use_cim_for(self, label: str) -> bool:
-        """The planner's "when" gate for one GEMM of this session (feeds
-        repro.quant.planned_linear's use_cim_path).  Accepts full
-        ("<model> Wq") or short ("Wq") labels; unknown labels raise
-        KeyError with the known-label list (the KernelPlanTable
-        contract) — model-side label drift must not silently disable
-        gating."""
-        return self.verdict_table.use_cim(
-            strip_model_prefix(label, self.cfg.name))
+        """The planner's "when" gate for one GEMM of this session —
+        see DecodeCore.use_cim_for."""
+        return self.core.use_cim_for(label)
 
     def route_report(self) -> dict:
         """label -> {route, use_cim, what, where} as actually lowered by
         this session's jitted decode step (abstract trace, no compute)."""
-        step = make_serve_step(self.cfg, self.rc, self.plan_table)
-        with route_trace() as records:
-            jax.eval_shape(step, self.params, self.cache,
-                           _token_struct(self.cfg, self.batch),
-                           jax.ShapeDtypeStruct((), jnp.int32))
-        report = {}
-        for r in records:
-            entry = (self.plan_table.entry(r["label"])
-                     if self.plan_table is not None else None)
-            report[r["label"]] = {
-                "route": r["route"],
-                "use_cim": entry.use_cim if entry else False,
-                "what": entry.what if entry else "baseline",
-                "where": entry.where if entry else "PE"}
-        return report
+        return self.core.route_report(self.batch, self.max_len,
+                                      self.n_image_tokens)
 
     @property
     def decode_executables(self) -> int | None:
         """How many programs the jitted decode step compiled (the
         no-retrace gate expects exactly 1 after any amount of traffic).
         None when the private jax jit-cache probe is unavailable."""
-        probe = getattr(self._step, "_cache_size", None)
-        return probe() if probe is not None else None
+        return self.core.decode_executables
+
+    # --- request state --------------------------------------------------
 
     def reset(self) -> None:
         """Clear the KV cache and position for a fresh request; the
@@ -263,11 +222,4 @@ class ServeSession:
         return jnp.concatenate(out, axis=1)
 
     def _sample(self, logits, temperature, key):
-        last = logits[:, -1]
-        if temperature <= 0.0:
-            tok = jnp.argmax(last, axis=-1)
-        else:
-            tok = jax.random.categorical(key, last / temperature)
-        if self.cfg.family == "audio":
-            return tok[:, None, :] if tok.ndim == 2 else tok[:, None]
-        return tok[:, None].astype(jnp.int32)
+        return sample_token(self.cfg, logits, temperature, key)

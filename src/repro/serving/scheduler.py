@@ -1,0 +1,440 @@
+"""Slot-scheduled continuous batching over one compiled decode core.
+
+Production traffic is a stream of ragged requests, not one fixed-shape
+batch.  This module turns the plan-gated decode step into a request
+server:
+
+  * an **admission queue** (FIFO) of `Request`s;
+  * **slots**: the jitted step always runs at a fixed batch of
+    `n_slots` lanes; a request joins a free slot, decodes in place, and
+    is evicted on EOS / max-tokens — mid-decode, without retracing —
+    via the step's jit-dynamic active-slot mask;
+  * **paged KV**: attention caches live in a shared block pool
+    (models.model.init_paged_cache); a host-side `BlockAllocator` hands
+    fixed-size blocks to slots and reclaims them on eviction, so ragged
+    lengths share one executable and one pool;
+  * **piggy-backed prefill**: a joining request's prompt tokens stream
+    through the *same* decode step, one per engine iteration, while the
+    other slots keep generating — prefill and decode share the plan
+    gate, the executable, and the batch;
+  * **per-request telemetry**: TTFT, queue wait, decode tokens/s, plus
+    engine-level queue depth / slot occupancy / block usage samples.
+
+The scheduler is pure host-side Python around `DecodeCore.batch_step`;
+everything it varies per step (tokens, positions, active mask, block
+tables) is a jit-*dynamic* input, so any traffic pattern hits exactly
+one compiled executable (`decode_executables == 1`).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from ..models import period_slots
+from ..models.model import init_paged_cache
+from .core import DecodeCore, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request: a prompt plus generation settings.
+
+    Telemetry fields (t_*, tokens, ...) are engine-written; times are
+    seconds on the engine clock.  `tokens` holds generated token ids
+    (ints; audio: (n_codebooks,) int arrays)."""
+    rid: Any
+    prompt: Any                       # (P,) int32 (audio: (P, nb))
+    max_new_tokens: int
+    temperature: float = 0.0
+    eos_id: int | None = None
+    # --- engine-written telemetry ---
+    state: str = "new"                # new | queued | running | done
+    done_reason: str | None = None    # eos | max_tokens
+    t_submit: float | None = None
+    t_admit: float | None = None
+    t_first: float | None = None      # first generated token (TTFT ref)
+    t_done: float | None = None
+    tokens: list = dataclasses.field(default_factory=list)
+    first_logits: Any = None          # recorded iff record_logits=True
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+class BlockAllocator:
+    """Host-side free list over the paged KV pool's physical blocks.
+
+    Allocation is all-or-nothing per request (the engine reserves the
+    request's full horizon at admission, so a running request can never
+    hit pool exhaustion mid-decode — admission control is the only
+    back-pressure point)."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return blocks
+
+    def free(self, blocks: list[int]) -> None:
+        self._free.extend(reversed(blocks))
+
+
+class _Slot:
+    """Mutable per-slot decode state (host-side only)."""
+
+    def __init__(self, req: Request, blocks: list[int]):
+        self.req = req
+        self.blocks = blocks
+        self.pos = 0          # tokens written into this slot's KV/state
+        self.n_fed = 0        # prompt tokens consumed so far
+        self.n_gen = 0        # tokens generated so far
+        self.last_tok = None  # last generated token (decode feed)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.n_fed < self.req.prompt_len
+
+    def next_token(self):
+        return (self.req.prompt[self.n_fed] if self.prefilling
+                else self.last_tok)
+
+
+class ContinuousBatchingEngine:
+    """Request server: admission queue + slot-scheduled continuous
+    batching + paged KV, over one immutable `DecodeCore`.
+
+    Every engine iteration (`step()`) advances all active slots by one
+    token through the single jitted masked decode step: joining requests
+    stream prompt tokens (piggy-backed prefill), running requests feed
+    their last sampled token, and finished requests leave their slot the
+    moment EOS / max-tokens hits — the next queued request takes it on
+    the following step.
+    """
+
+    def __init__(self, core: DecodeCore, n_slots: int, max_len: int,
+                 block_size: int = 8, n_kv_blocks: int | None = None,
+                 seed: int = 0, record_logits: bool = False,
+                 clock: Callable[[], float] = time.perf_counter):
+        if core.cfg.family == "vlm":
+            raise NotImplementedError(
+                "continuous batching does not yet thread per-request "
+                "image embeddings through cross-attention slots")
+        self.core = core
+        self.cfg = core.cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.record_logits = record_logits
+        self.clock = clock
+        self.needs_kv = any(s.mixer == "attn"
+                            for s in period_slots(core.cfg))
+        self.max_blocks = max(1, math.ceil(max_len / block_size))
+        if n_kv_blocks is None:
+            n_kv_blocks = self.max_blocks * n_slots   # full provisioning
+        self.allocator = BlockAllocator(n_kv_blocks if self.needs_kv
+                                        else 0)
+        self.cache = init_paged_cache(core.cfg, core.rc, n_slots,
+                                      max(1, n_kv_blocks), block_size)
+        self.block_tables = np.zeros((n_slots, self.max_blocks), np.int32)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.slots: list[_Slot | None] = [None] * n_slots
+        self._key = jax.random.PRNGKey(seed)
+        self._t0: float | None = None
+        # counters + per-step samples (the telemetry block)
+        self.completed: list[Request] = []
+        self.evictions = 0
+        self.steps = 0
+        self.queue_depth_samples: list[int] = []
+        self.occupancy_samples: list[float] = []
+
+    # --- admission ------------------------------------------------------
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = self.clock()
+        return self.clock() - self._t0
+
+    def _blocks_needed(self, req: Request) -> int:
+        if not self.needs_kv:
+            return 0
+        return math.ceil((req.prompt_len + req.max_new_tokens)
+                         / self.block_size)
+
+    def submit(self, req: Request) -> None:
+        """Queue a request (validates it can ever be admitted)."""
+        horizon = req.prompt_len + req.max_new_tokens
+        if horizon > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt_len + max_new_tokens = "
+                f"{horizon} exceeds engine max_len {self.max_len}")
+        if self._blocks_needed(req) > self.allocator.n_blocks:
+            raise ValueError(
+                f"request {req.rid} needs {self._blocks_needed(req)} KV "
+                f"blocks; the pool only has {self.allocator.n_blocks}")
+        req.prompt = np.asarray(req.prompt, np.int32)
+        req.state = "queued"
+        req.t_submit = self._now()
+        self.queue.append(req)
+
+    def _reset_slot_state(self, i: int) -> None:
+        """Zero the joining slot's O(1) caches (mamba state / conv
+        carry).  Attention needs nothing: stale pool blocks are dead by
+        construction (per-slot lens mask + freed block ids)."""
+        for c, entry in enumerate(self.cache):
+            if "state" in entry:
+                self.cache[c] = {
+                    "state": entry["state"].at[:, i].set(0.0),
+                    "conv": entry["conv"].at[:, i].set(0.0)}
+
+    def _admit(self) -> None:
+        """FIFO admission: the queue head takes the first free slot if
+        its full KV horizon fits in the pool (no skipping — head-of-line
+        order keeps TTFT fairness)."""
+        for i in range(self.n_slots):
+            if not self.queue:
+                return
+            if self.slots[i] is not None:
+                continue
+            req = self.queue[0]
+            blocks = self.allocator.alloc(self._blocks_needed(req))
+            if blocks is None:
+                return                      # pool pressure: wait
+            self.queue.popleft()
+            self.block_tables[i, :] = 0
+            if blocks:
+                self.block_tables[i, :len(blocks)] = blocks
+            self._reset_slot_state(i)
+            self.slots[i] = _Slot(req, blocks)
+            req.state = "running"
+            req.t_admit = self._now()
+
+    # --- the engine iteration -------------------------------------------
+
+    @property
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _token_batch(self) -> np.ndarray:
+        shape = ((self.n_slots, 1, self.cfg.audio.n_codebooks)
+                 if self.cfg.family == "audio" else (self.n_slots, 1))
+        toks = np.zeros(shape, np.int32)
+        for i, st in enumerate(self.slots):
+            if st is not None:
+                toks[i, 0] = st.next_token()
+        return toks
+
+    def step(self) -> bool:
+        """One engine iteration.  Returns False when idle (nothing
+        active and nothing admissible)."""
+        self._admit()
+        self.queue_depth_samples.append(len(self.queue))
+        self.occupancy_samples.append(self.active_slots / self.n_slots)
+        if self.active_slots == 0:
+            return False
+        tokens = self._token_batch()
+        pos = np.array([0 if s is None else s.pos for s in self.slots],
+                       np.int32)
+        active = np.array([s is not None for s in self.slots], bool)
+        logits, self.cache = self.core.batch_step(
+            self.core.params, self.cache, tokens, pos, active,
+            self.block_tables)
+        self.steps += 1
+        greedy = np.asarray(jax.device_get(
+            sample_token(self.cfg, logits, 0.0, None)))
+        now = self._now()
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            fed_prompt = st.prefilling
+            st.pos += 1
+            if fed_prompt:
+                st.n_fed += 1
+                if st.prefilling:
+                    continue        # mid-prompt: sampled token discarded
+            tok = self._sample_slot(i, st, logits, greedy)
+            st.n_gen += 1
+            st.last_tok = tok
+            req = st.req
+            req.tokens.append(tok)
+            if st.n_gen == 1:
+                req.t_first = now
+                if self.record_logits:
+                    req.first_logits = np.asarray(
+                        jax.device_get(logits[i, -1]), np.float32)
+            hit_eos = (req.eos_id is not None
+                       and self.cfg.family != "audio"
+                       and int(tok) == req.eos_id)
+            if hit_eos or st.n_gen >= req.max_new_tokens:
+                self._evict(i, "eos" if hit_eos else "max_tokens", now)
+        return True
+
+    def _sample_slot(self, i: int, st: _Slot, logits, greedy):
+        """Next token for slot i: batchwide greedy argmax unless the
+        request asked for temperature sampling (then a per-slot
+        categorical draw from the engine's PRNG stream)."""
+        if st.req.temperature <= 0.0:
+            return greedy[i, 0]
+        self._key, sub = jax.random.split(self._key)
+        row = logits[i, -1].astype(np.float32) / st.req.temperature
+        tok = jax.random.categorical(sub, row, axis=-1)
+        return np.asarray(jax.device_get(tok), np.int32)
+
+    def _evict(self, i: int, reason: str, now: float) -> None:
+        st = self.slots[i]
+        self.allocator.free(st.blocks)
+        self.slots[i] = None
+        self.evictions += 1
+        st.req.state = "done"
+        st.req.done_reason = reason
+        st.req.t_done = now
+        self.completed.append(st.req)
+
+    # --- driving loops ----------------------------------------------------
+
+    def run(self, requests: list[Request],
+            arrival_times: list[float] | None = None,
+            timeout_s: float = 300.0) -> dict:
+        """Drive an open-loop arrival process to completion.
+
+        `arrival_times[i]` is request i's arrival offset (seconds from
+        run start) on the engine clock; None submits everything up
+        front.  Returns `telemetry()`."""
+        self._t0 = None
+        t_start = self._now()           # pins the epoch
+        target = len(self.completed) + len(requests)
+        pending = sorted(zip(arrival_times or [0.0] * len(requests),
+                             requests), key=lambda p: p[0])
+        while len(self.completed) < target:
+            now = self._now()
+            if now - t_start > timeout_s:
+                raise RuntimeError(
+                    f"engine run exceeded {timeout_s}s with "
+                    f"{len(pending)} arrivals pending")
+            while pending and pending[0][0] <= now:
+                self.submit(pending.pop(0)[1])
+            if not self.step() and pending:
+                # idle until the next arrival is due (open-loop clock)
+                time.sleep(min(0.001, max(0.0, pending[0][0]
+                                          - self._now())))
+        return self.telemetry()
+
+    def drain(self, timeout_s: float = 300.0) -> None:
+        """Step until queue + slots are empty."""
+        t0 = self._now()
+        while self.step():
+            if self._now() - t0 > timeout_s:
+                raise RuntimeError(f"drain exceeded {timeout_s}s")
+
+    # --- telemetry --------------------------------------------------------
+
+    @property
+    def decode_executables(self) -> int | None:
+        """Compiled program count of the masked batch step — the
+        continuous-batching no-retrace gate (expects exactly 1)."""
+        return self.core.batch_decode_executables
+
+    def telemetry(self) -> dict:
+        """Per-request + engine-aggregate serving telemetry."""
+        reqs = []
+        for r in self.completed:
+            decode_s = ((r.t_done - r.t_first)
+                        if r.t_first is not None and len(r.tokens) > 1
+                        else None)
+            reqs.append({
+                "rid": r.rid,
+                "prompt_len": r.prompt_len,
+                "new_tokens": len(r.tokens),
+                "done_reason": r.done_reason,
+                "queue_wait_s": r.t_admit - r.t_submit,
+                "ttft_s": r.t_first - r.t_submit,
+                "decode_tokens_per_s": (
+                    (len(r.tokens) - 1) / decode_s
+                    if decode_s and decode_s > 0 else None),
+            })
+        ttfts = [r["ttft_s"] for r in reqs]
+        total_tokens = sum(r["new_tokens"] for r in reqs)
+        t_done = [r.t_done for r in self.completed]
+        makespan = max(t_done) if t_done else 0.0
+        dts = [r["decode_tokens_per_s"] for r in reqs
+               if r["decode_tokens_per_s"]]
+        agg = {
+            "completed": len(self.completed),
+            "evictions": self.evictions,
+            "eos_evictions": sum(r["done_reason"] == "eos" for r in reqs),
+            "steps": self.steps,
+            "total_new_tokens": total_tokens,
+            "engine_tokens_per_s": (total_tokens / makespan
+                                    if makespan > 0 else None),
+            "request_tokens_per_s_mean": (float(np.mean(dts))
+                                          if dts else None),
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
+            "ttft_p50_s": float(np.percentile(ttfts, 50)) if ttfts
+            else None,
+            "ttft_p95_s": float(np.percentile(ttfts, 95)) if ttfts
+            else None,
+            "queue_depth_mean": (float(np.mean(self.queue_depth_samples))
+                                 if self.queue_depth_samples else 0.0),
+            "queue_depth_max": (int(max(self.queue_depth_samples))
+                                if self.queue_depth_samples else 0),
+            "slot_occupancy_mean": (float(np.mean(self.occupancy_samples))
+                                    if self.occupancy_samples else 0.0),
+            "n_slots": self.n_slots,
+            "kv_blocks": {"total": self.allocator.n_blocks,
+                          "block_size": self.block_size,
+                          "peak_in_use": self.allocator.peak_in_use},
+            "decode_executables": self.decode_executables,
+        }
+        return {"requests": reqs, "aggregate": agg}
+
+
+# --- synthetic open-loop traffic ------------------------------------------
+
+
+def synthetic_requests(cfg, n: int, seed: int = 0,
+                       prompt_len: tuple[int, int] = (4, 12),
+                       new_tokens: tuple[int, int] = (4, 16),
+                       temperature: float = 0.0) -> list[Request]:
+    """Seeded ragged request set (uniform prompt/output length ranges,
+    inclusive) — the reproducible workload behind `launch.serve
+    --requests` and the traffic benchmark."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        p = int(rng.randint(prompt_len[0], prompt_len[1] + 1))
+        m = int(rng.randint(new_tokens[0], new_tokens[1] + 1))
+        shape = ((p, cfg.audio.n_codebooks) if cfg.family == "audio"
+                 else (p,))
+        prompt = rng.randint(0, cfg.vocab, size=shape).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=m,
+                            temperature=temperature))
+    return reqs
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> list[float]:
+    """Open-loop Poisson arrival offsets (seconds): exponential
+    inter-arrivals at `rate` req/s.  rate <= 0 means all-at-once."""
+    if rate <= 0:
+        return [0.0] * n
+    rng = np.random.RandomState(seed)
+    return list(np.cumsum(rng.exponential(1.0 / rate, size=n)))

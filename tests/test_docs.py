@@ -86,10 +86,10 @@ SNIPPETS = _python_snippets()
 def test_docs_contain_executable_snippets():
     """The extractor really found code (an empty list would make the
     exec test below pass vacuously)."""
-    assert len(SNIPPETS) >= 3
+    assert len(SNIPPETS) >= 4
     assert {doc for doc, _, _ in SNIPPETS} >= {
         "architecture.md", "sweep-backends.md",
-        "reproducing-paper-figures.md"}
+        "reproducing-paper-figures.md", "serving.md"}
 
 
 @pytest.mark.parametrize("doc,idx,code",
@@ -156,5 +156,5 @@ def test_readme_links_the_docs_tree():
     with open(os.path.join(REPO, "README.md")) as f:
         readme = f.read()
     for doc in ("docs/architecture.md", "docs/sweep-backends.md",
-                "docs/reproducing-paper-figures.md"):
+                "docs/reproducing-paper-figures.md", "docs/serving.md"):
         assert doc in readme, f"README does not link {doc}"
