@@ -52,9 +52,11 @@ from .serve_gating_bench import PARITY_ATOL
 from .sweep_bench import _provenance
 
 # open-loop arrival rates (req/s): under-, near-, and over-saturated
-# relative to the smoke engine's service rate — three points draw the
-# throughput-vs-latency knee
-RATES = (2.0, 8.0, 32.0)
+# relative to the smoke engine's service rate (~25ms per tiny request,
+# 4 slots) — three points draw the throughput-vs-latency knee: at the
+# top rate occupancy passes 0.8 and the admission queue backs up, so
+# TTFT percentiles lift off the flat low-rate floor
+RATES = (4.0, 32.0, 256.0)
 N_REQUESTS = 10            # requests per rate
 N_SLOTS = 4
 BLOCK_SIZE = 4             # small so smoke prompts cross block edges
