@@ -102,14 +102,15 @@ def serve_gating_speed(write_json: bool = True, new_tokens: int = NEW_TOKENS,
     }
     if write_json:
         out = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
-        # preserve the traffic bench's block if one is already recorded
-        # (the two benches share the file; each owns its keys)
+        # preserve the traffic and adaptive benches' blocks if already
+        # recorded (the three benches share the file; each owns its keys)
         if os.path.exists(out):
             try:
                 with open(out) as f:
                     prev = json.load(f)
-                if "traffic" in prev:
-                    derived["traffic"] = prev["traffic"]
+                for key in ("traffic", "adaptive"):
+                    if key in prev:
+                        derived[key] = prev[key]
             except (json.JSONDecodeError, OSError):
                 pass
         if not all_parity_ok:

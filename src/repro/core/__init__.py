@@ -13,6 +13,7 @@ from .heuristic import random_search
 from .mapping import CiMMapping, priority_map
 from .memory import (DRAM, LEVELS, RF, SMEM, CiMSystemConfig, configb_count,
                      iso_area_primitive_count)
+from .plan_service import BucketLattice, PlanService
 from .planner import (Decision, decide, make_decision, plan_workload,
                       standard_configs, summarize)
 from .sweep import (SweepEngine, decide_batched, plan_workload_batched,
@@ -40,4 +41,5 @@ __all__ = [
     "evaluate_batch", "exhaustive_best", "make_decision",
     "SweepEngine", "decide_batched", "plan_workload_batched",
     "sweep_evaluate", "sweep_evaluate_baseline",
+    "BucketLattice", "PlanService",
 ]

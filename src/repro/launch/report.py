@@ -184,6 +184,49 @@ def serve_traffic_table(bench: dict) -> str:
     return "\n".join(lines)
 
 
+def serve_adaptive_table(bench: dict) -> str:
+    """Adaptive-planning rows from BENCH_serve.json's `adaptive` block
+    (benchmarks.serve_adaptive_bench): adaptive vs frozen-plan engine
+    throughput, the hot-swap counters of the forced-flip scenario, and
+    the per-bucket hit/build/flip table of the plan service."""
+    a = bench.get("adaptive")
+    if not a:
+        return "(no adaptive block in BENCH_serve.json — run " \
+               "benchmarks.serve_adaptive_bench)"
+    lines = [f"arch={a['arch']} slots={a['n_slots']} "
+             f"requests={a['requests']} seed={a['seed']}",
+             "",
+             "| mode | engine tok/s | plan swaps | verdict flips | "
+             "executables | swap mean | swap max |",
+             "|---|---|---|---|---|---|---|"]
+    for mode in ("no_flip", "forced_flip"):
+        s = a.get(mode)
+        if not s:
+            continue
+        lat = s.get("swap_latency_s") or {}
+        mean = lat.get("mean")
+        mx = lat.get("max")
+        lines.append(
+            f"| {mode.replace('_', '-')} | "
+            f"{s['engine_tokens_per_s']:.1f} | {s['plan_swaps']} | "
+            f"{s['verdict_flips']} | {s['decode_executables']} | "
+            f"{fmt_s(mean) if mean else '—'} | "
+            f"{fmt_s(mx) if mx else '—'} |")
+    frozen = a.get("frozen_tokens_per_s")
+    if frozen is not None:
+        lines.append(f"\nfrozen-plan reference engine: {frozen:.1f} tok/s")
+    buckets = ((a.get("forced_flip") or {}).get("service") or {}) \
+        .get("buckets") or {}
+    if buckets:
+        lines += ["", "| bucket | hits | misses | builds | flips | "
+                  "plan digest |", "|---|---|---|---|---|---|"]
+        for name, b in buckets.items():
+            lines.append(
+                f"| {name} | {b['hits']} | {b['misses']} | "
+                f"{b['builds']} | {b['flips']} | {b['table_digest']} |")
+    return "\n".join(lines)
+
+
 def summarize(cells: list[dict]) -> dict:
     ok = [c for c in cells if c["status"] == "ok"]
     skipped = [c for c in cells if c["status"] == "skipped"]
@@ -220,8 +263,12 @@ if __name__ == "__main__":
     bench_path = os.environ.get("BENCH_SERVE_OUT", "BENCH_serve.json")
     if os.path.exists(bench_path):
         with open(bench_path) as f:
-            print("\n## Serving traffic (continuous batching, "
-                  "throughput vs latency)\n")
-            print(serve_traffic_table(json.load(f)))
+            bench = json.load(f)
+        print("\n## Serving traffic (continuous batching, "
+              "throughput vs latency)\n")
+        print(serve_traffic_table(bench))
+        print("\n## Adaptive planning (bucket hit rates, verdict "
+              "flips, plan swaps)\n")
+        print(serve_adaptive_table(bench))
     print("\n## Summary\n")
     print(json.dumps(summarize(cells), indent=1))

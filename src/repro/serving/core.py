@@ -8,7 +8,7 @@ The scheduler layer (repro.serving.scheduler) and the legacy fixed-batch
 `ServeSession` (repro.serving.engine) are both thin mutable shells over
 one core — requests join and leave, the core never retraces.
 
-Two executables live here, each compiled exactly once:
+Two kinds of executables live here, each compiled exactly once per plan:
 
   * `step(params, cache, tokens, pos)` — the legacy fixed-batch step
     (scalar uniform position), what the dry-run lowers and ServeSession
@@ -18,11 +18,22 @@ Two executables live here, each compiled exactly once:
     mask, and a paged KV block pool (models.model.init_paged_cache).
     All four scheduler-side inputs are jit-*dynamic*, so slot churn under
     live traffic hits the same compiled program every step.
+
+The continuous-batching step is served from a **bounded per-plan
+executable cache** (`batch_step_for(plan)`): each distinct (versioned)
+`KernelPlanTable` gets its own jitted program, LRU-bounded at
+`max_plan_variants`.  That is what lets the adaptive serving layer
+(`repro.serving.scheduler` + `repro.core.plan_service`) hot-swap the
+decode plan when a shape bucket's verdict flips — a flip compiles the
+new variant once, off the critical decode step, and every later step
+under either plan reuses its already-compiled program
+(`batch_decode_executables == number of distinct plans served`).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict
 from typing import Any
 
 import jax
@@ -77,13 +88,21 @@ class DecodeCore:
     # the paper's M=1 pathology; ServeSession passes its own)
     plan_batch: int = 8
     plan_max_len: int = 1024
+    # bound on concurrently-cached jitted batch-step variants (one per
+    # distinct plan table the adaptive layer has served)
+    max_plan_variants: int = 4
 
     def __post_init__(self):
+        if self.max_plan_variants < 1:
+            raise ValueError(f"max_plan_variants must be >= 1, "
+                             f"got {self.max_plan_variants}")
         self._kernel_plan = None
         self._plan_cache_telemetry = None
         self._plan_lock = threading.Lock()
         self._verdict_table = None
-        self._batch_step = None
+        self._batch_steps: OrderedDict = OrderedDict()
+        self._exec_lock = threading.Lock()
+        self.plan_evictions = 0
         self.plan_table = None
         if self.quantize:
             # plan BEFORE jit: the verdicts are static inputs of the one
@@ -165,21 +184,46 @@ class DecodeCore:
         """Legacy fixed-batch decode step (uniform scalar position)."""
         return self._step(self.params, cache, tokens, pos)
 
-    @property
-    def batch_step(self):
-        """The continuous-batching executable, jitted on first use:
-        (params, cache, tokens, pos_vec, active, block_tables) ->
+    def batch_step_for(self, plan):
+        """The continuous-batching executable for one (versioned) plan
+        table: (params, cache, tokens, pos_vec, active, block_tables) ->
         (logits, cache).  pos_vec (b,) int32, active (b,) bool and
         block_tables (b, max_blocks) int32 are dynamic — join/evict/
-        ragged lengths never retrace."""
-        if self._batch_step is None:
-            cfg, rc, plan = self.cfg, self.rc, self.plan_table
-            self._batch_step = jax.jit(
-                lambda params, cache, tokens, pos, active, block_tables:
-                decode_step(params, cache, tokens, pos, cfg, rc,
-                            plan=plan, active=active,
-                            block_tables=block_tables))
-        return self._batch_step
+        ragged lengths never retrace.
+
+        Variants are memoized per plan table (the table's hash/equality
+        is its version) in an LRU bounded by `max_plan_variants`: an
+        adaptive engine swapping between plans reuses each variant's
+        single compiled program; a plan evicted from the bound recompiles
+        if it ever returns (`plan_evictions` counts those drops)."""
+        with self._exec_lock:
+            fn = self._batch_steps.get(plan)
+            if fn is None:
+                cfg, rc = self.cfg, self.rc
+                fn = jax.jit(
+                    lambda params, cache, tokens, pos, active,
+                    block_tables, _plan=plan:
+                    decode_step(params, cache, tokens, pos, cfg, rc,
+                                plan=_plan, active=active,
+                                block_tables=block_tables))
+                self._batch_steps[plan] = fn
+            self._batch_steps.move_to_end(plan)
+            while len(self._batch_steps) > self.max_plan_variants:
+                self._batch_steps.popitem(last=False)
+                self.plan_evictions += 1
+        return fn
+
+    @property
+    def batch_step(self):
+        """The continuous-batching executable for this core's own frozen
+        plan table (the non-adaptive path) — see `batch_step_for`."""
+        return self.batch_step_for(self.plan_table)
+
+    @property
+    def plan_variants(self) -> int:
+        """Distinct plan tables with a live jitted batch-step variant."""
+        with self._exec_lock:
+            return len(self._batch_steps)
 
     @staticmethod
     def _executables(fn) -> int | None:
@@ -195,11 +239,19 @@ class DecodeCore:
 
     @property
     def batch_decode_executables(self) -> int | None:
-        """Programs compiled by the continuous-batching step — the
-        tentpole no-retrace gate for slot churn under live traffic."""
-        if self._batch_step is None:
+        """Total programs compiled across every cached batch-step variant
+        — the no-retrace gate: equals 1 for frozen-plan traffic and the
+        number of distinct plan tables for adaptive traffic (each variant
+        compiles exactly once).  None if the private jax jit-cache probe
+        is unavailable."""
+        with self._exec_lock:
+            fns = list(self._batch_steps.values())
+        if not fns:
             return 0
-        return self._executables(self._batch_step)
+        counts = [self._executables(f) for f in fns]
+        if any(c is None for c in counts):
+            return None
+        return sum(counts)
 
     def route_report(self, batch: int, max_len: int,
                      n_image_tokens: int = 0) -> dict:

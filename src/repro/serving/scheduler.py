@@ -18,12 +18,22 @@ server:
     other slots keep generating — prefill and decode share the plan
     gate, the executable, and the batch;
   * **per-request telemetry**: TTFT, queue wait, decode tokens/s, plus
-    engine-level queue depth / slot occupancy / block usage samples.
+    engine-level queue depth / slot occupancy / block usage samples;
+  * **adaptive planning** (optional): an engine given a
+    `repro.core.plan_service.PlanService` consults it every step at the
+    live operating point (active-slot count, deepest position); when the
+    shape bucket's verdict flips, the engine **hot-swaps** the decode
+    plan — the new plan's executable is fetched (compiling at most once,
+    off the critical decode step, via a discarded warm-up call) from
+    `DecodeCore.batch_step_for`'s bounded variant cache, then the step
+    pointer flips.  Bucket transitions, plan swaps and swap latencies
+    land in `telemetry()["adaptive"]`.
 
 The scheduler is pure host-side Python around `DecodeCore.batch_step`;
 everything it varies per step (tokens, positions, active mask, block
 tables) is a jit-*dynamic* input, so any traffic pattern hits exactly
-one compiled executable (`decode_executables == 1`).
+one compiled executable per distinct plan (`decode_executables == 1`
+frozen, `== n_distinct_plans` adaptive).
 """
 from __future__ import annotations
 
@@ -79,6 +89,7 @@ class BlockAllocator:
     def __init__(self, n_blocks: int):
         self.n_blocks = n_blocks
         self._free = list(range(n_blocks - 1, -1, -1))
+        self._free_set = set(self._free)
         self.peak_in_use = 0
 
     @property
@@ -90,14 +101,32 @@ class BlockAllocator:
         return self.n_blocks - len(self._free)
 
     def alloc(self, n: int) -> list[int] | None:
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
         if n > len(self._free):
             return None
         blocks = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(blocks)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return blocks
 
     def free(self, blocks: list[int]) -> None:
+        """Return blocks to the pool.  A double-free or an id the pool
+        never issued would silently corrupt the free list (free_blocks
+        could exceed n_blocks and a block could be handed to two slots),
+        so both raise — and validation happens before any mutation, so a
+        bad call leaves the allocator state untouched."""
+        bad = [b for b in blocks
+               if not (0 <= b < self.n_blocks) or b in self._free_set]
+        if len(set(blocks)) != len(blocks):
+            bad.extend(b for b in set(blocks)
+                       if blocks.count(b) > 1 and b not in bad)
+        if bad:
+            raise ValueError(
+                f"invalid free of block ids {sorted(set(bad))}: "
+                f"double-free or id outside pool [0, {self.n_blocks})")
         self._free.extend(reversed(blocks))
+        self._free_set.update(blocks)
 
 
 class _Slot:
@@ -135,11 +164,17 @@ class ContinuousBatchingEngine:
     def __init__(self, core: DecodeCore, n_slots: int, max_len: int,
                  block_size: int = 8, n_kv_blocks: int | None = None,
                  seed: int = 0, record_logits: bool = False,
+                 plan_service=None,
                  clock: Callable[[], float] = time.perf_counter):
         if core.cfg.family == "vlm":
             raise NotImplementedError(
                 "continuous batching does not yet thread per-request "
                 "image embeddings through cross-attention slots")
+        if plan_service is not None and core.plan_table is None:
+            raise ValueError(
+                "adaptive planning needs a plan-gated core: build the "
+                "DecodeCore with quantize=True so plan tables route the "
+                "decode step (an unquantized core ignores verdicts)")
         self.core = core
         self.cfg = core.cfg
         self.n_slots = n_slots
@@ -167,6 +202,14 @@ class ContinuousBatchingEngine:
         self.steps = 0
         self.queue_depth_samples: list[int] = []
         self.occupancy_samples: list[float] = []
+        # adaptive planning: current plan + hot-swap telemetry
+        self.plan_service = plan_service
+        self._plan = core.plan_table
+        self._step_fn = None          # resolved lazily / on swap
+        self._bucket: tuple[int, int] | None = None
+        self.bucket_transitions = 0
+        self.plan_swaps = 0
+        self.swap_latencies_s: list[float] = []
 
     # --- admission ------------------------------------------------------
 
@@ -244,6 +287,39 @@ class ContinuousBatchingEngine:
                 toks[i, 0] = st.next_token()
         return toks
 
+    def _consult_plan_service(self) -> None:
+        """Ask the plan service for the current operating point's bucket
+        verdicts; hot-swap the decode plan if they differ from the one
+        being served (the swap compiles at most once, off the decode hot
+        path — see `_swap_plan`)."""
+        n_active = self.active_slots
+        max_pos = max(s.pos for s in self.slots if s is not None)
+        bucket, table = self.plan_service.lookup(n_active, max_pos)
+        if bucket != self._bucket:
+            if self._bucket is not None:
+                self.bucket_transitions += 1
+            self._bucket = bucket
+        if table != self._plan:
+            self._swap_plan(table)
+
+    def _swap_plan(self, table) -> None:
+        """Compile-then-swap: fetch the new plan's executable from the
+        core's bounded variant cache and warm it with a discarded
+        all-inactive call (so any compile happens *here*, between steps,
+        never inside the decode hot path), then flip the step pointer.
+        The full fetch+warm latency is recorded as the swap latency —
+        near-zero when the variant is already compiled."""
+        t0 = self.clock()
+        fn = self.core.batch_step_for(table)
+        warm = fn(self.core.params, self.cache, self._token_batch(),
+                  np.zeros(self.n_slots, np.int32),
+                  np.zeros(self.n_slots, bool), self.block_tables)
+        jax.block_until_ready(warm)
+        self.swap_latencies_s.append(self.clock() - t0)
+        self._plan = table
+        self._step_fn = fn
+        self.plan_swaps += 1
+
     def step(self) -> bool:
         """One engine iteration.  Returns False when idle (nothing
         active and nothing admissible)."""
@@ -252,11 +328,15 @@ class ContinuousBatchingEngine:
         self.occupancy_samples.append(self.active_slots / self.n_slots)
         if self.active_slots == 0:
             return False
+        if self.plan_service is not None:
+            self._consult_plan_service()
+        if self._step_fn is None:
+            self._step_fn = self.core.batch_step_for(self._plan)
         tokens = self._token_batch()
         pos = np.array([0 if s is None else s.pos for s in self.slots],
                        np.int32)
         active = np.array([s is not None for s in self.slots], bool)
-        logits, self.cache = self.core.batch_step(
+        logits, self.cache = self._step_fn(
             self.core.params, self.cache, tokens, pos, active,
             self.block_tables)
         self.steps += 1
@@ -358,6 +438,10 @@ class ContinuousBatchingEngine:
         """Per-request + engine-aggregate serving telemetry."""
         reqs = []
         for r in self.completed:
+            # a request can complete without ever generating a token
+            # (t_first is None — e.g. evicted before its first decode);
+            # its latency fields are None and it is excluded from the
+            # TTFT percentiles below rather than crashing them
             decode_s = ((r.t_done - r.t_first)
                         if r.t_first is not None and len(r.tokens) > 1
                         else None)
@@ -366,13 +450,15 @@ class ContinuousBatchingEngine:
                 "prompt_len": r.prompt_len,
                 "new_tokens": len(r.tokens),
                 "done_reason": r.done_reason,
-                "queue_wait_s": r.t_admit - r.t_submit,
-                "ttft_s": r.t_first - r.t_submit,
+                "queue_wait_s": (r.t_admit - r.t_submit
+                                 if r.t_admit is not None else None),
+                "ttft_s": (r.t_first - r.t_submit
+                           if r.t_first is not None else None),
                 "decode_tokens_per_s": (
                     (len(r.tokens) - 1) / decode_s
                     if decode_s and decode_s > 0 else None),
             })
-        ttfts = [r["ttft_s"] for r in reqs]
+        ttfts = [r["ttft_s"] for r in reqs if r["ttft_s"] is not None]
         total_tokens = sum(r["new_tokens"] for r in reqs)
         t_done = [r.t_done for r in self.completed]
         makespan = max(t_done) if t_done else 0.0
@@ -405,7 +491,32 @@ class ContinuousBatchingEngine:
                           "peak_in_use": self.allocator.peak_in_use},
             "decode_executables": self.decode_executables,
         }
-        return {"requests": reqs, "aggregate": agg}
+        return {"requests": reqs, "aggregate": agg,
+                "adaptive": self._adaptive_telemetry()}
+
+    def _adaptive_telemetry(self) -> dict | None:
+        """The telemetry()["adaptive"] block: bucket transitions, plan
+        swaps + latency stats, the core's variant-cache state, and the
+        plan service's per-bucket hit/flip counters.  None when the
+        engine runs a frozen plan."""
+        if self.plan_service is None:
+            return None
+        lat = self.swap_latencies_s
+        return {
+            "bucket_transitions": self.bucket_transitions,
+            "plan_swaps": self.plan_swaps,
+            "swap_latency_s": {
+                "count": len(lat),
+                "mean": float(np.mean(lat)) if lat else None,
+                "max": float(max(lat)) if lat else None,
+                "total": float(sum(lat)),
+            },
+            "plan_variants": self.core.plan_variants,
+            "plan_evictions": self.core.plan_evictions,
+            "active_plan_digest": (self._plan.digest
+                                   if self._plan is not None else None),
+            "service": self.plan_service.telemetry(),
+        }
 
 
 # --- synthetic open-loop traffic ------------------------------------------

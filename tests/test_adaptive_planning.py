@@ -1,0 +1,364 @@
+"""Online adaptive planning: lattice, plan service, versioned tables,
+and hot-swapped decode plans.
+
+Covers the PR-7 contracts end to end on reduced CPU smoke configs:
+
+* `BucketLattice` — snap-up bucketing (a bucket's representative shape
+  dominates every point it serves), clamping beyond the grid, CLI-spec
+  parsing, constructor validation;
+* `PlanService` — cold-miss/warm-hit counters, `refresh_every`
+  refreshes, verdict-flip detection with an injected `plan_fn`,
+  background-thread drain;
+* `KernelPlanTable` versioning — digest/equality stable across
+  `from_decisions` orderings, `flips()` diffs, the
+  KeyError-with-known-labels drift gate on swapped tables,
+  `strip_model_prefix` edge cases;
+* `DecodeCore.batch_step_for` — one compiled callable per distinct
+  plan table in a bounded LRU (`max_plan_variants`);
+* the engine — token-exact vs the frozen-plan engine when no verdict
+  flips, and under a forced mid-run flip: hot-swap without retracing
+  (`decode_executables == plan_variants == number of distinct plans`).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig, reduced
+from repro.core.plan_service import BucketLattice, PlanService
+from repro.models import init
+from repro.quant.plan_table import (KernelPlanTable, PlanEntry,
+                                    strip_model_prefix)
+from repro.serving import (ContinuousBatchingEngine, DecodeCore,
+                           synthetic_requests)
+
+RC = RunConfig(attn_impl="naive", remat=False)
+MAX_LEN = 24
+BLOCK = 4
+N_SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def mamba():
+    """Quantized gated ssm core at the engine planning shape."""
+    cfg = reduced(ARCHS["mamba2-780m"])
+    params = init(jax.random.PRNGKey(0), cfg)
+    core = DecodeCore(cfg, RC, params, quantize=True,
+                      plan_batch=N_SLOTS, plan_max_len=MAX_LEN)
+    return cfg, params, core
+
+
+def _engine(core, service=None, **kw):
+    kw.setdefault("n_slots", N_SLOTS)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("block_size", BLOCK)
+    return ContinuousBatchingEngine(core, plan_service=service, **kw)
+
+
+def _requests(cfg, n=3):
+    return synthetic_requests(cfg, n, seed=0, prompt_len=(3, 6),
+                              new_tokens=(4, 8))
+
+
+# --- BucketLattice ----------------------------------------------------------
+
+
+def test_lattice_snaps_up_and_clamps():
+    lat = BucketLattice((1, 2, 4), (8, 16, 24))
+    assert lat.bucket_of(1, 0) == (1, 8)
+    # max_pos snaps as a *length* (max_pos + 1): position 7 needs 8
+    assert lat.bucket_of(1, 7) == (1, 8)
+    assert lat.bucket_of(1, 8) == (1, 16)
+    assert lat.bucket_of(3, 20) == (4, 24)
+    # beyond the top edge: clamp, never KeyError
+    assert lat.bucket_of(99, 999) == (4, 24)
+    # degenerate inputs floor at 1
+    assert lat.bucket_of(0, -3) == (1, 8)
+    assert lat.n_buckets == 9
+
+
+def test_lattice_bucket_dominates_served_point():
+    """The representative shape is >= every point it serves (the plan
+    must never be computed at a smaller GEMM than the live one)."""
+    lat = BucketLattice.for_engine(4, 24)
+    for n in range(1, 5):
+        for pos in range(24):
+            b, l = lat.bucket_of(n, pos)
+            assert b >= n and l >= pos + 1
+
+
+def test_lattice_for_engine_pow2_edges():
+    lat = BucketLattice.for_engine(4, 24)
+    assert lat.batch_edges == (1, 2, 4)
+    assert lat.len_edges == (1, 2, 4, 8, 16, 24)
+    # the top edge is always the true maximum, even when not a pow2
+    assert BucketLattice.for_engine(3, 10).batch_edges == (1, 2, 3)
+
+
+def test_lattice_parse_roundtrip_and_errors():
+    lat = BucketLattice.parse("1,2,4:8,24")
+    assert lat.batch_edges == (1, 2, 4)
+    assert lat.len_edges == (8, 24)
+    with pytest.raises(ValueError, match="bucket-edges spec"):
+        BucketLattice.parse("1,2,4")          # no colon
+    with pytest.raises(ValueError, match="bucket-edges spec"):
+        BucketLattice.parse("1,x:8")          # non-integer
+
+
+def test_lattice_validation():
+    with pytest.raises(ValueError, match="must not be empty"):
+        BucketLattice((), (8,))
+    with pytest.raises(ValueError, match="must be positive"):
+        BucketLattice((0, 2), (8,))
+    with pytest.raises(ValueError, match="strictly ascending"):
+        BucketLattice((1, 2), (8, 8))
+
+
+# --- KernelPlanTable versioning ---------------------------------------------
+
+
+def _decision(label, use_cim, what="baseline", where="PE"):
+    """Minimal planner-Decision stand-in for from_decisions."""
+    gemm = dataclasses.make_dataclass("G", ["label"])(label)
+    return dataclasses.make_dataclass(
+        "D", ["gemm", "use_cim", "what", "where"])(
+            gemm, use_cim, what, where)
+
+
+def test_digest_and_equality_stable_across_orderings():
+    a = KernelPlanTable.from_decisions(
+        [_decision("m Wq", True), _decision("m lm_head", False)],
+        model_name="m")
+    b = KernelPlanTable.from_decisions(
+        [_decision("m lm_head", False), _decision("m Wq", True)],
+        model_name="m")
+    assert a == b
+    assert hash(a) == hash(b)
+    assert a.digest == b.digest
+    assert len(a.digest) == 12
+    # any verdict change is a new version
+    assert a.with_flip("Wq").digest != a.digest
+
+
+def test_flips_diffs_by_gate_and_one_sided_labels():
+    a = KernelPlanTable.from_decisions(
+        [_decision("Wq", True), _decision("Wk", False)])
+    assert a.flips(a) == ()
+    assert a.flips(a.with_flip("Wk")) == ("Wk",)
+    # a label present in only one table counts as flipped
+    wider = KernelPlanTable(entries=a.entries
+                            + (("Wv", PlanEntry(use_cim=True)),))
+    assert a.flips(wider) == ("Wv",)
+    assert wider.flips(a) == ("Wv",)
+
+
+def test_with_flip_keeps_drift_gate_on_swapped_tables():
+    """The KeyError-with-known-labels contract survives a swap: the
+    flipped variant must reject unknown labels exactly like the
+    original (silent ungating on label drift is the failure mode)."""
+    base = KernelPlanTable.from_decisions(
+        [_decision("Wq", True), _decision("lm_head", False)])
+    swapped = base.with_flip("lm_head")
+    assert swapped.use_cim("lm_head") != base.use_cim("lm_head")
+    assert swapped.use_cim("Wq") == base.use_cim("Wq")
+    with pytest.raises(KeyError, match="known labels.*Wq"):
+        swapped.use_cim("mlp-up")
+    with pytest.raises(KeyError, match="unknown GEMM label"):
+        base.with_flip("nope")
+
+
+def test_strip_model_prefix_edges():
+    assert strip_model_prefix("m Wq", "m") == "Wq"
+    # empty model name: no prefix to strip
+    assert strip_model_prefix("m Wq", "") == "m Wq"
+    # label equal to the bare prefix (no trailing space): untouched
+    assert strip_model_prefix("m", "m") == "m"
+    # prefix-with-space but empty remainder strips to empty
+    assert strip_model_prefix("m ", "m") == ""
+    assert strip_model_prefix("other Wq", "m") == "other Wq"
+
+
+# --- PlanService ------------------------------------------------------------
+
+
+def _stub_plan_fn(flip_on_build=None):
+    """Planner stub: one fixed verdict set, optionally toggling Wq from
+    the `flip_on_build`-th build (0-indexed) of each shape onward."""
+    builds = {}
+
+    def plan_fn(shape):
+        n = builds.get(shape.name, 0)
+        builds[shape.name] = n + 1
+        flip = flip_on_build is not None and n >= flip_on_build
+        return [_decision("Wq", not flip), _decision("lm_head", False)]
+
+    return plan_fn
+
+
+def test_service_miss_then_hits(mamba):
+    cfg, _, _ = mamba
+    svc = PlanService(cfg, BucketLattice((2,), (24,)), background=False,
+                      plan_fn=_stub_plan_fn())
+    b1, t1 = svc.lookup(1, 3)
+    b2, t2 = svc.lookup(2, 10)
+    assert b1 == b2 == (2, 24)
+    assert t1 is t2                      # memoized, not rebuilt
+    tel = svc.telemetry()
+    assert tel["lookups"] == 2
+    rec = tel["buckets"]["b2xl24"]
+    assert (rec["misses"], rec["hits"], rec["builds"]) == (1, 1, 1)
+    assert rec["table_digest"] == t1.digest
+    assert tel["hit_rate"] == 0.5
+    assert tel["verdict_flips"] == 0
+
+
+def test_service_refresh_and_flip_detection(mamba):
+    cfg, _, _ = mamba
+    svc = PlanService(cfg, BucketLattice((2,), (24,)), refresh_every=2,
+                      background=False, plan_fn=_stub_plan_fn(flip_on_build=1))
+    _, t0 = svc.lookup(1, 1)             # miss: build 0 (unflipped)
+    _, t1 = svc.lookup(1, 1)             # hit 1
+    _, t2 = svc.lookup(1, 1)             # hit 2 -> inline refresh: flip
+    assert t1 == t0
+    assert t2 != t0
+    assert svc.verdict_flips == 1
+    rec = svc.telemetry()["buckets"]["b2xl24"]
+    assert rec["flips"] == 1
+    assert rec["flipped_labels"] == ["Wq"]
+    assert rec["builds"] == 2
+    # the flipped table keeps being served (and re-confirmed) afterwards
+    _, t3 = svc.lookup(1, 1)
+    assert t3 == t2
+
+
+def test_service_background_refresh_drains(mamba):
+    cfg, _, _ = mamba
+    svc = PlanService(cfg, BucketLattice((2,), (24,)), refresh_every=1,
+                      background=True, plan_fn=_stub_plan_fn(flip_on_build=1))
+    svc.lookup(1, 1)
+    svc.lookup(1, 1)                     # schedules the background refresh
+    svc.drain()
+    assert svc.verdict_flips == 1
+    _, t = svc.lookup(1, 1)
+    assert t.use_cim("Wq") is False      # the flipped table landed
+
+
+def test_service_rejects_negative_refresh(mamba):
+    cfg, _, _ = mamba
+    with pytest.raises(ValueError, match="refresh_every"):
+        PlanService(cfg, BucketLattice((2,), (24,)), refresh_every=-1)
+
+
+def test_service_default_planner_builds_real_table(mamba):
+    """The un-stubbed service plans through the real batched sweep and
+    produces a table equal to the core's frozen plan when the bucket
+    matches the core's planning shape."""
+    cfg, _, core = mamba
+    svc = PlanService(cfg, BucketLattice((N_SLOTS,), (MAX_LEN,)),
+                      background=False)
+    _, table = svc.lookup(N_SLOTS, MAX_LEN - 1)
+    assert table == core.plan_table
+    assert table.digest == core.plan_table.digest
+
+
+# --- DecodeCore bounded variant cache ---------------------------------------
+
+
+def test_core_variant_cache_bounded_and_keyed_by_table(mamba):
+    cfg, params, _ = mamba
+    core = DecodeCore(cfg, RC, params, quantize=True,
+                      plan_batch=N_SLOTS, plan_max_len=MAX_LEN,
+                      max_plan_variants=2)
+    base = core.plan_table
+    fn0 = core.batch_step_for(base)
+    assert core.batch_step_for(base) is fn0          # same table, same fn
+    assert core.batch_step is fn0
+    flipped = base.with_flip(base.labels[0])
+    fn1 = core.batch_step_for(flipped)
+    assert fn1 is not fn0
+    assert core.plan_variants == 2
+    assert core.plan_evictions == 0
+    # a third distinct table evicts the LRU victim (base, the oldest)
+    third = flipped.with_flip(base.labels[-1])
+    core.batch_step_for(third)
+    assert core.plan_variants == 2
+    assert core.plan_evictions == 1
+    # re-requesting the evicted table re-jits it and evicts the next
+    # LRU victim — the bound holds
+    core.batch_step_for(base)
+    assert core.plan_variants == 2
+    assert core.plan_evictions == 2
+
+
+def test_core_rejects_nonpositive_variant_bound(mamba):
+    cfg, params, _ = mamba
+    with pytest.raises(ValueError, match="max_plan_variants"):
+        DecodeCore(cfg, RC, params, quantize=True, plan_batch=N_SLOTS,
+                   plan_max_len=MAX_LEN, max_plan_variants=0)
+
+
+# --- engine integration ------------------------------------------------------
+
+
+def test_engine_requires_gated_core_for_adaptive(mamba):
+    cfg, params, _ = mamba
+    ungated = DecodeCore(cfg, RC, params, quantize=False)
+    svc = PlanService(cfg, BucketLattice((N_SLOTS,), (MAX_LEN,)),
+                      background=False)
+    with pytest.raises(ValueError, match="plan-gated core"):
+        _engine(ungated, service=svc)
+
+
+def test_adaptive_token_exact_when_no_flips(mamba):
+    """Over a single-bucket lattice matching the frozen planning shape
+    every lookup returns the frozen plan: the adaptive engine must be
+    token-identical to the frozen-plan engine with zero swaps and one
+    executable (the acceptance gate)."""
+    cfg, _, core = mamba
+    frozen = _engine(core)
+    frozen.run(_requests(cfg), None)
+    want = {r.rid: list(map(int, r.tokens)) for r in frozen.completed}
+
+    svc = PlanService(cfg, BucketLattice((N_SLOTS,), (MAX_LEN,)),
+                      background=False)
+    eng = _engine(core, service=svc)
+    t = eng.run(_requests(cfg), None)
+    got = {r.rid: list(map(int, r.tokens)) for r in eng.completed}
+    assert got == want
+    ad = t["adaptive"]
+    assert ad["plan_swaps"] == 0
+    assert ad["service"]["verdict_flips"] == 0
+    assert ad["active_plan_digest"] == core.plan_table.digest
+    assert core.batch_decode_executables in (1, None)
+
+
+def test_forced_flip_swaps_without_retrace(mamba):
+    """A mid-run verdict flip hot-swaps the decode plan: the engine
+    serves a second compiled variant and the compiled-program count
+    equals the number of distinct plan tables (nothing retraced)."""
+    cfg, params, _ = mamba
+    core = DecodeCore(cfg, RC, params, quantize=True,
+                      plan_batch=N_SLOTS, plan_max_len=MAX_LEN)
+    base = core.plan_table
+
+    def plan_fn(shape, _n=[0]):
+        _n[0] += 1
+        entries = base if _n[0] == 1 else base.with_flip("lm_head")
+        return [_decision(lab, e.use_cim, e.what, e.where)
+                for lab, e in entries.entries]
+
+    svc = PlanService(cfg, BucketLattice((N_SLOTS,), (MAX_LEN,)),
+                      refresh_every=3, background=False, plan_fn=plan_fn)
+    eng = _engine(core, service=svc)
+    t = eng.run(_requests(cfg, n=4), None)
+    ad = t["adaptive"]
+    assert t["aggregate"]["completed"] == 4
+    assert ad["plan_swaps"] >= 1
+    assert ad["service"]["verdict_flips"] >= 1
+    assert ad["active_plan_digest"] == base.with_flip("lm_head").digest
+    assert ad["swap_latency_s"]["count"] == ad["plan_swaps"]
+    assert core.plan_variants == 2
+    # the no-retrace gate, generalized: one lowered program per distinct
+    # plan table served
+    assert core.batch_decode_executables in (2, None)

@@ -89,7 +89,8 @@ def test_docs_contain_executable_snippets():
     assert len(SNIPPETS) >= 4
     assert {doc for doc, _, _ in SNIPPETS} >= {
         "architecture.md", "sweep-backends.md",
-        "reproducing-paper-figures.md", "serving.md"}
+        "reproducing-paper-figures.md", "serving.md",
+        "adaptive-planning.md"}
 
 
 @pytest.mark.parametrize("doc,idx,code",
@@ -156,5 +157,6 @@ def test_readme_links_the_docs_tree():
     with open(os.path.join(REPO, "README.md")) as f:
         readme = f.read()
     for doc in ("docs/architecture.md", "docs/sweep-backends.md",
-                "docs/reproducing-paper-figures.md", "docs/serving.md"):
+                "docs/reproducing-paper-figures.md", "docs/serving.md",
+                "docs/adaptive-planning.md"):
         assert doc in readme, f"README does not link {doc}"

@@ -76,6 +76,41 @@ def test_allocator_all_or_nothing_and_reuse():
     assert a.peak_in_use == 4
 
 
+def test_allocator_rejects_double_free():
+    """A double-free (in a later call or within one call) raises and
+    leaves the free list untouched — a silently re-listed id would be
+    handed to two slots."""
+    a = BlockAllocator(4)
+    blocks = a.alloc(2)
+    a.free(blocks)
+    with pytest.raises(ValueError, match="double-free"):
+        a.free(blocks)                       # already back in the pool
+    assert a.free_blocks == 4                # state untouched by the raise
+    fresh = a.alloc(1)
+    with pytest.raises(ValueError, match="double-free"):
+        a.free(fresh + fresh)                # duplicate within one call
+    assert a.in_use == 1                     # still held: nothing mutated
+    a.free(fresh)                            # the valid free still works
+    assert a.free_blocks == 4
+    assert a.peak_in_use == 2                # unchanged by the bad calls
+
+
+def test_allocator_rejects_foreign_ids():
+    """Ids the pool never issued (negative or >= n_blocks) raise; a
+    mixed batch of valid+foreign ids mutates nothing."""
+    a = BlockAllocator(4)
+    held = a.alloc(2)
+    for bad in ([-1], [4], [99]):
+        with pytest.raises(ValueError, match=r"outside pool \[0, 4\)"):
+            a.free(bad)
+    with pytest.raises(ValueError):
+        a.free([held[0], 7])                 # valid id rides along: still atomic
+    assert a.in_use == 2                     # the valid id was NOT freed
+    a.free(held)
+    assert a.free_blocks == 4
+    assert a.peak_in_use == 2
+
+
 def test_pool_exhaustion_defers_admission(mamba):
     """A KV-less arch can't exercise pool pressure, so force it via a
     tiny allocator on the attention-free engine path is moot — instead
@@ -223,3 +258,32 @@ def test_vlm_rejected():
     core = DecodeCore(cfg, RC, params, quantize=False)
     with pytest.raises(NotImplementedError, match="image embeddings"):
         ContinuousBatchingEngine(core, n_slots=2, max_len=MAX_LEN)
+
+
+def test_telemetry_handles_request_without_first_token(mamba):
+    """A request can complete without ever generating a token (evicted
+    before its first decode): t_first is None.  telemetry() must emit
+    None latency fields for it and exclude it from the TTFT percentiles
+    instead of raising (the regression: `None - float` TypeError)."""
+    cfg, params, core = mamba
+    eng = _engine(core, n_slots=2)
+    eng.run(synthetic_requests(cfg, 2, seed=3, prompt_len=(3, 5),
+                               new_tokens=(3, 5)), None)
+    ghost = Request(rid="ghost", prompt=np.arange(3, dtype=np.int32),
+                    max_new_tokens=4)
+    ghost.state, ghost.done_reason = "done", "max_tokens"
+    ghost.t_submit, ghost.t_done = 0.0, 1.0   # admitted/decoded: never
+    eng.completed.append(ghost)
+    t = eng.telemetry()                        # must not raise
+    by_rid = {r["rid"]: r for r in t["requests"]}
+    g = by_rid["ghost"]
+    assert g["ttft_s"] is None
+    assert g["queue_wait_s"] is None
+    assert g["decode_tokens_per_s"] is None
+    # percentiles computed over the two real requests only
+    real_ttfts = [r["ttft_s"] for r in t["requests"] if r["rid"] != "ghost"]
+    assert all(x is not None for x in real_ttfts)
+    agg = t["aggregate"]
+    assert agg["completed"] == 3
+    assert min(real_ttfts) <= agg["ttft_p50_s"] <= max(real_ttfts)
+    assert agg["ttft_p95_s"] is not None
