@@ -9,7 +9,7 @@ configs — the scheduling mechanism is what's measured, not TPU
 throughput; the curves' *shape* (TTFT rising with arrival rate while
 engine tokens/s saturates) is the trajectory signal.
 
-Two gate families protect the numbers:
+Three gate families protect the numbers:
 
   * **parity** — for each parity arch, every request served through the
     continuous engine must produce exactly the tokens the legacy
@@ -21,6 +21,10 @@ Two gate families protect the numbers:
   * **no-retrace** — after all traffic at all rates,
     `decode_executables == 1`: every ragged pattern hit one compiled
     masked step.
+  * **trend** — engine tokens/s per rate and the fixed-batch anchor vs
+    the committed BENCH_serve.json baseline must not drop beyond the
+    SERVE_TREND_RTOL band (benchmarks.trend); deltas land in the GitHub
+    job summary when CI provides one.
 
 Like the gating bench, a run violating any gate is quarantined to
 BENCH_serve.json.failed instead of replacing the trusted trajectory
@@ -50,6 +54,8 @@ from repro.serving import (ContinuousBatchingEngine, DecodeCore,
 
 from .serve_gating_bench import PARITY_ATOL
 from .sweep_bench import _provenance
+from .trend import (committed_baseline, emit_job_summary, render_markdown,
+                    trend_report)
 
 # open-loop arrival rates (req/s): under-, near-, and over-saturated
 # relative to the smoke engine's service rate (~25ms per tiny request,
@@ -122,6 +128,22 @@ def serve_traffic(write_json: bool = True, rates=RATES,
     rc = RunConfig(attn_impl="naive", remat=False)
     params = init(jax.random.PRNGKey(0), cfg)
     max_len = _max_len()
+    # fixed-batch anchor FIRST, while the process is fresh: the legacy
+    # lockstep session at batch=N_SLOTS on the same weights, timed by
+    # the shared helper (warmed, best-of).  Measured after the engine
+    # curves it inherits their allocator/cache drag and reads up to 35%
+    # low — the same in-process interference the gating bench dodges
+    # with per-arch subprocesses.
+    ref_sess = ServeSession(cfg, rc, params, max_len=max_len,
+                            batch=N_SLOTS, quantize=True)
+    ref_prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (N_SLOTS, PROMPT_RANGE[1]), 0,
+                                    cfg.vocab)
+    (ref_tps,) = steady_decode_tokens_per_s([ref_sess], ref_prompt,
+                                            NEW_RANGE[1], repeats=5,
+                                            warmup=2)
+    del ref_sess
+
     core = DecodeCore(cfg, rc, params, quantize=True,
                       plan_batch=N_SLOTS, plan_max_len=max_len)
 
@@ -162,20 +184,28 @@ def serve_traffic(write_json: bool = True, rates=RATES,
             "slot_occupancy_mean": agg["slot_occupancy_mean"],
             "evictions": agg["evictions"],
             "kv_blocks_peak_in_use": agg["kv_blocks"]["peak_in_use"],
+            "kv_donation_ok": agg["kv_donation_ok"],
+            "decode_step_breakdown": agg["decode_step_breakdown"],
         })
-
-    # fixed-batch anchor: the legacy lockstep session at batch=N_SLOTS on
-    # the same weights, timed by the shared helper (warmed, best-of)
-    ref_sess = ServeSession(cfg, rc, params, max_len=max_len,
-                            batch=N_SLOTS, quantize=True)
-    prompt = jax.random.randint(jax.random.PRNGKey(1),
-                                (N_SLOTS, PROMPT_RANGE[1]), 0, cfg.vocab)
-    (ref_tps,) = steady_decode_tokens_per_s([ref_sess], prompt,
-                                            NEW_RANGE[1], warmup=2)
 
     parity = [_parity_case(a) for a in PARITY_ARCHS]
     retrace_ok = all(e in (1, None) for e in executables) and all(
         p["decode_executables"] in (1, None) for p in parity)
+
+    # perf-trend lane: engine throughput per rate + the fixed-batch
+    # anchor vs the committed baseline's traffic block
+    base = (committed_baseline() or {}).get("traffic", {})
+    base_curves = {c["arrival_rate_req_per_s"]: c
+                   for c in base.get("curves", [])}
+    pairs = [(f"rate {c['arrival_rate_req_per_s']} engine tokens/s",
+              base_curves.get(c["arrival_rate_req_per_s"], {})
+              .get("engine_tokens_per_s"),
+              c["engine_tokens_per_s"]) for c in curves]
+    pairs.append(("fixed-batch reference tokens/s",
+                  base.get("fixed_batch_reference_tokens_per_s"), ref_tps))
+    trend = trend_report(pairs)
+    emit_job_summary(render_markdown("serve_traffic_bench trend", trend))
+
     traffic = {
         "arch": cfg.name,
         "n_slots": N_SLOTS,
@@ -186,10 +216,12 @@ def serve_traffic(write_json: bool = True, rates=RATES,
         "fixed_batch_reference_tokens_per_s": round(ref_tps, 1),
         "parity": parity,
         "parity_atol": PARITY_ATOL,
+        "trend": trend,
         "gates": {
             "parity_ok": all(p["parity_ok"] for p in parity),
             "all_completed": all_completed,
             "decode_executables_ok": retrace_ok,
+            "trend_ok": trend["ok"],
         },
         "provenance": _provenance(),
     }
@@ -234,3 +266,6 @@ if __name__ == "__main__":
     if not gates["decode_executables_ok"]:
         sys.exit("retrace regression: ragged traffic compiled more than "
                  "one masked decode executable")
+    if not gates["trend_ok"]:
+        sys.exit("perf-trend regression: engine tokens/s dropped beyond "
+                 "the SERVE_TREND_RTOL band vs the committed baseline")

@@ -1,0 +1,102 @@
+"""Perf-trend lane shared by the serving benchmarks.
+
+Both serving benches (serve_gating_bench, serve_traffic_bench) compare
+their freshly-measured tokens/s against the *committed*
+BENCH_serve.json baseline — git HEAD's copy when the repo is available,
+the on-disk file otherwise (a fresh CI checkout makes the two
+identical) — and report per-metric deltas.  A drop beyond the tolerance
+band (SERVE_TREND_RTOL, default 0.25: CPU smoke timings jitter run to
+run, so the band catches collapse-scale regressions, not noise) is a
+trend regression and quarantines the run exactly like a parity failure.
+
+Deltas land in the bench JSON under each bench's "trend" key and, when
+CI provides $GITHUB_STEP_SUMMARY, as a markdown table in the job
+summary.  SERVE_TREND_BASELINE points the comparison at an explicit
+baseline file (tests use it to avoid depending on git state).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+
+DEFAULT_RTOL = 0.25
+
+
+def trend_rtol() -> float:
+    return float(os.environ.get("SERVE_TREND_RTOL", DEFAULT_RTOL))
+
+
+def committed_baseline(path: str = "BENCH_serve.json") -> dict | None:
+    """The committed benchmark file to trend against.
+
+    SERVE_TREND_BASELINE (explicit file) wins; otherwise git HEAD's copy
+    of `path`; otherwise the on-disk file; None when nothing exists yet
+    (first trajectory entry — every trend row then passes vacuously)."""
+    override = os.environ.get("SERVE_TREND_BASELINE")
+    if override:
+        try:
+            with open(override) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return None
+    try:
+        proc = subprocess.run(
+            ["git", "show", f"HEAD:{os.path.basename(path)}"],
+            capture_output=True, text=True, timeout=30,
+            cwd=os.path.dirname(os.path.abspath(path)))
+        if proc.returncode == 0:
+            return json.loads(proc.stdout)
+    except (OSError, subprocess.SubprocessError, json.JSONDecodeError):
+        pass
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def trend_report(pairs, rtol: float | None = None) -> dict:
+    """pairs: iterable of (metric_label, baseline_value|None, current).
+    A row regresses when current < baseline * (1 - rtol); rows with no
+    baseline (new metric / first entry) pass vacuously."""
+    if rtol is None:
+        rtol = trend_rtol()
+    rows, ok = [], True
+    for label, base, cur in pairs:
+        if not base:
+            rows.append({"metric": label, "baseline": base,
+                         "current": round(cur, 1), "delta_pct": None,
+                         "ok": True})
+            continue
+        row_ok = cur >= base * (1.0 - rtol)
+        ok &= row_ok
+        rows.append({"metric": label, "baseline": base,
+                     "current": round(cur, 1),
+                     "delta_pct": round(100.0 * (cur - base) / base, 1),
+                     "ok": row_ok})
+    return {"rtol": rtol, "rows": rows, "ok": ok}
+
+
+def render_markdown(title: str, report: dict) -> str:
+    lines = [f"### {title}", "",
+             f"tolerance band: -{100.0 * report['rtol']:.0f}% "
+             "(SERVE_TREND_RTOL)", "",
+             "| metric | baseline | current | delta | ok |",
+             "|---|---:|---:|---:|:--:|"]
+    for r in report["rows"]:
+        delta = ("n/a" if r["delta_pct"] is None
+                 else f"{r['delta_pct']:+.1f}%")
+        base = "n/a" if not r["baseline"] else f"{r['baseline']}"
+        mark = "ok" if r["ok"] else "**REGRESSION**"
+        lines.append(f"| {r['metric']} | {base} | {r['current']} "
+                     f"| {delta} | {mark} |")
+    return "\n".join(lines) + "\n"
+
+
+def emit_job_summary(md: str) -> None:
+    """Append to the GitHub Actions job summary when CI provides one."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as f:
+            f.write(md + "\n")

@@ -11,7 +11,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..core.tpu_adapter import choose_blocks
 from . import decode_attention as _da
 from . import flash_attention as _fa
 from . import int8_gemm as _ig
@@ -26,13 +25,15 @@ def _on_cpu() -> bool:
 def int8_matmul(x, w_q, w_scale, dataflow: str = "os",
                 block_m: int = 0, block_n: int = 0, block_k: int = 0,
                 interpret: bool | None = None):
-    """y = x @ dequant(w_q); blocks auto-chosen by the WWW adapter."""
+    """y = x @ dequant(w_q); blocks from the autotune table (VMEM-aware
+    shape-class entries, analytic WWW-adapter choice as fallback)."""
+    from .autotune import int8_gemm_blocks
     if interpret is None:
         interpret = _on_cpu()
     M, K = x.shape
     N = w_q.shape[1]
     if not (block_m and block_n and block_k):
-        block_m, block_n, block_k = choose_blocks(M, N, K)
+        block_m, block_n, block_k = int8_gemm_blocks(M, N, K)
     return _ig.int8_gemm(x, w_q, w_scale, block_m=block_m,
                          block_n=block_n, block_k=block_k,
                          dataflow=dataflow, interpret=interpret)

@@ -44,10 +44,14 @@ SWEEP_OUT_FIELDS = ("valid", "energy_pj", "time_ns", "tops_per_w",
                     "gflops", "utilization", "compute_ns", "dram_ns",
                     "smem_ns", "dram_bytes", "smem_bytes")
 
-# Rows per grid step.  VMEM footprint is (len(FLAT_FIELDS) +
+# Reference rows-per-grid-step.  VMEM footprint is (len(FLAT_FIELDS) +
 # len(SWEEP_OUT_FIELDS)) * block * 4B ≈ 1 MB at 8192 plus intermediates —
 # comfortably under the ~16 MB/core budget, and big enough that the
 # full-workload planner batch (~8k rows) runs in a single grid step.
+# The default is now autotuned per batch (kernels.autotune
+# .sweep_block_rows): small batches take the smallest single-grid-step
+# ladder entry, campaign-scale batches stream at the largest
+# VMEM-fitting block.
 _BLOCK_ROWS = 8192
 
 
@@ -65,14 +69,16 @@ def _sweep_kernel(in_ref, out_ref, *, order_mode: str, dram_eff: float):
 
 def sweep_eval(batch: dict, order_mode: str = "exact",
                dram_eff: float = DRAM_STREAM_EFFICIENCY,
-               block_rows: int = _BLOCK_ROWS,
+               block_rows: int | None = None,
                interpret: bool | None = None) -> dict:
     """Pallas-fused equivalent of `vectorized.evaluate_flat`.
 
     batch: dict of (B,) arrays for every name in FLAT_FIELDS; returns the
     same dict of (B,) arrays (valid as bool).  Rows are padded (edge
     replication) to a multiple of `block_rows` and the padding is sliced
-    off before returning.
+    off before returning.  block_rows=None autotunes it from the batch
+    size and the VMEM budget (kernels.autotune.sweep_block_rows); block
+    choice never changes the values, only the grid decomposition.
     """
     check_order_mode(order_mode)
     if interpret is None:
@@ -80,6 +86,10 @@ def sweep_eval(batch: dict, order_mode: str = "exact",
     rows = jnp.stack([jnp.asarray(batch[f]).astype(jnp.float32)
                       for f in FLAT_FIELDS])
     b = rows.shape[1]
+    if block_rows is None:
+        from .autotune import sweep_block_rows
+        block_rows = sweep_block_rows(b, len(FLAT_FIELDS),
+                                      len(SWEEP_OUT_FIELDS))
     blk = min(block_rows, max(1, b))
     m = -(-b // blk) * blk
     if m != b:

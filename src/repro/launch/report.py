@@ -184,6 +184,37 @@ def serve_traffic_table(bench: dict) -> str:
     return "\n".join(lines)
 
 
+def serve_step_breakdown_table(bench: dict) -> str:
+    """Decode hot-path health from the `traffic` block's per-rate
+    `decode_step_breakdown`: where each step's host budget went
+    (device dispatch vs blocking host fetch vs telemetry sampling),
+    whether the loop ran pipelined (host fetch of step t overlapped
+    with step t+1's compute), and whether KV-cache buffer donation took
+    effect (no per-token pool copy; "off" = donation disabled, the CPU
+    default)."""
+    t = bench.get("traffic")
+    curves = (t or {}).get("curves", [])
+    if not any("decode_step_breakdown" in c for c in curves):
+        return "(no decode_step_breakdown in BENCH_serve.json traffic " \
+               "curves — regenerate with benchmarks.serve_traffic_bench)"
+    lines = ["| arrival req/s | steps | pipelined | donation | "
+             "dispatch/step | fetch/step | telemetry/step |",
+             "|---|---|---|---|---|---|---|"]
+    for c in curves:
+        b = c.get("decode_step_breakdown")
+        if not b:
+            continue
+        don = c.get("kv_donation_ok")
+        lines.append(
+            f"| {c['arrival_rate_req_per_s']:g} | {b['steps']} | "
+            f"{'yes' if b['pipelined'] else 'no'} | "
+            f"{'ok' if don else ('off' if don is None else 'FAIL')} | "
+            f"{b['dispatch_ms_per_step']:.2f}ms | "
+            f"{b['host_fetch_ms_per_step']:.2f}ms | "
+            f"{b['telemetry_ms_per_step']:.2f}ms |")
+    return "\n".join(lines)
+
+
 def serve_adaptive_table(bench: dict) -> str:
     """Adaptive-planning rows from BENCH_serve.json's `adaptive` block
     (benchmarks.serve_adaptive_bench): adaptive vs frozen-plan engine
@@ -267,6 +298,9 @@ if __name__ == "__main__":
         print("\n## Serving traffic (continuous batching, "
               "throughput vs latency)\n")
         print(serve_traffic_table(bench))
+        print("\n## Decode step breakdown (dispatch vs host fetch vs "
+              "telemetry)\n")
+        print(serve_step_breakdown_table(bench))
         print("\n## Adaptive planning (bucket hit rates, verdict "
               "flips, plan swaps)\n")
         print(serve_adaptive_table(bench))

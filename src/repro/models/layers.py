@@ -22,7 +22,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..quant.int8 import dequantize_weight, planned_linear
+from ..quant.int8 import dequant_contract, planned_linear
 
 
 def dtype_of(name: str):
@@ -77,7 +77,9 @@ def linear(w, x, label: str, plan=None, spec: str | None = None):
     (repro.quant.quantize_model_params).  With a KernelPlanTable `plan`,
     a quantized 2-D projection whose label gates on lowers to the
     weight-stationary INT8 Pallas kernel (planned_linear); everything
-    else dequantizes in x.dtype and runs the standard XLA contraction.
+    else contracts against the raw int8 weight in x.dtype with the
+    per-output-channel scale fused into the output epilogue
+    (dequant_contract) — no per-step weight materialization.
     `spec` is an optional einsum spec for batched weights (MoE experts
     `"ecd,edf->ecf"`, audio lm_head `"bld,ndv->blnv"`); the Pallas path
     only applies to plain 2-D matmuls.
@@ -94,11 +96,10 @@ def linear(w, x, label: str, plan=None, spec: str | None = None):
             _record_route(label, CIM_ROUTE)
             return planned_linear(x, w["q"], w["scale"], use_cim_path=True)
         _record_route(label, DEQUANT_ROUTE)
-        w = dequantize_weight(w["q"], w["scale"], x.dtype)
-    else:
-        _record_route(label, FLOAT_ROUTE)
-        if w.dtype != x.dtype:
-            w = w.astype(x.dtype)
+        return dequant_contract(x, w["q"], w["scale"], spec)
+    _record_route(label, FLOAT_ROUTE)
+    if w.dtype != x.dtype:
+        w = w.astype(x.dtype)
     return jnp.einsum(spec, x, w) if spec else x @ w
 
 

@@ -7,6 +7,14 @@ into an (E, C, d) buffer -> batched expert matmuls -> weighted gather-back.
 Tokens beyond expert capacity are dropped (standard capacity-factor MoE).
 Under EP the (E, C, d) buffer is sharded on E over the model axis and the
 scatter/gather lower to all-to-alls.
+
+Decode exception: when the token count fits expert capacity (T <= C —
+always true for a decode micro-batch) capacity dropping is impossible,
+so `moe_apply` skips the dispatch machinery and runs every expert over
+every token with a plain batched einsum, then selects each token's
+top-k outputs.  Same math (the fast-path FLOP count E*T rows is <= the
+buffer's E*C), far fewer ops on the hot path — the scatter/cumsum/
+segment-sum chain is the dominant per-step cost at decode shapes.
 """
 from __future__ import annotations
 
@@ -42,8 +50,12 @@ def capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)      # round up to 8
 
 
-def moe_apply(params, x, cfg: ModelConfig, plan=None):
-    """x: (b, l, d) -> (y, aux_loss)."""
+def moe_apply(params, x, cfg: ModelConfig, plan=None, *,
+              force_buffered: bool = False):
+    """x: (b, l, d) -> (y, aux_loss).
+
+    `force_buffered` disables the T <= C decode fast path so the parity
+    test can pin both dispatch forms to the same output."""
     m = cfg.moe
     b, l, d = x.shape
     T = b * l
@@ -58,35 +70,60 @@ def moe_apply(params, x, cfg: ModelConfig, plan=None):
     gate_vals = gate_vals / jnp.maximum(
         gate_vals.sum(-1, keepdims=True), 1e-9)
 
-    # position of each (token, k) assignment within its expert
-    flat_ids = expert_ids.reshape(-1)                        # (T*k,)
-    onehot = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - 1                     # (T*k, E)
-    pos_in_expert = jnp.take_along_axis(
-        pos, flat_ids[:, None], axis=1)[:, 0]                # (T*k,)
-    keep = pos_in_expert < C
+    if T <= C and not force_buffered:
+        # decode / micro-batch fast path: an expert can receive at most
+        # T <= C assignments (a token's top-k experts are distinct), so
+        # capacity dropping is IMPOSSIBLE and the scatter/gather
+        # dispatch machinery below is pure overhead — at decode shapes
+        # it costs more host+device dispatch than the compute it
+        # avoids.  Run every expert over every token outright (E*T rows
+        # vs the buffer's E*C, T <= C) and select each token's top-k
+        # outputs.  The per-(expert, token) dot products and the
+        # k-ascending weighted sum are the same contractions in the
+        # same order as the buffered path: identical semantics, fewer
+        # ops.
+        g = jax.nn.silu(linear(params["w_gate"], xt, "expert-gate",
+                               plan, spec="td,edf->etf"))
+        u = linear(params["w_up"], xt, "expert-up", plan,
+                   spec="td,edf->etf")
+        eout = linear(params["w_down"], g * u, "expert-down", plan,
+                      spec="etf,efd->etd")          # (E, T, d)
+        sel = jnp.take_along_axis(eout.transpose(1, 0, 2),
+                                  expert_ids[:, :, None], axis=1)
+        yt = (sel * gate_vals[:, :, None].astype(x.dtype)).sum(axis=1)
+    else:
+        # position of each (token, k) assignment within its expert
+        flat_ids = expert_ids.reshape(-1)                    # (T*k,)
+        onehot = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - 1                 # (T*k, E)
+        pos_in_expert = jnp.take_along_axis(
+            pos, flat_ids[:, None], axis=1)[:, 0]            # (T*k,)
+        keep = pos_in_expert < C
 
-    # scatter tokens into (E, C, d)
-    tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
-    buf = jnp.zeros((m.n_experts, C, d), x.dtype)
-    safe_pos = jnp.where(keep, pos_in_expert, C - 1)
-    contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
-    buf = buf.at[flat_ids, safe_pos].add(contrib)
+        # scatter tokens into (E, C, d)
+        tok_idx = jnp.repeat(jnp.arange(T), m.top_k)
+        buf = jnp.zeros((m.n_experts, C, d), x.dtype)
+        safe_pos = jnp.where(keep, pos_in_expert, C - 1)
+        contrib = jnp.where(keep[:, None], xt[tok_idx], 0)
+        buf = buf.at[flat_ids, safe_pos].add(contrib)
 
-    # batched expert SwiGLU.  Expert weights are (E, d, f): the planner's
-    # verdict gates dequantization routing, but the batched-expert einsum
-    # has no 2-D weight-stationary form, so a gated expert label executes
-    # as an int8-dequant XLA contraction (recorded as such by route_trace)
-    g = jax.nn.silu(linear(params["w_gate"], buf, "expert-gate", plan,
-                           spec="ecd,edf->ecf"))
-    u = linear(params["w_up"], buf, "expert-up", plan, spec="ecd,edf->ecf")
-    eout = linear(params["w_down"], g * u, "expert-down", plan,
-                  spec="ecf,efd->ecd")
+        # batched expert SwiGLU.  Expert weights are (E, d, f): the
+        # planner's verdict gates dequantization routing, but the
+        # batched-expert einsum has no 2-D weight-stationary form, so a
+        # gated expert label executes as an int8-dequant XLA
+        # contraction (recorded as such by route_trace)
+        g = jax.nn.silu(linear(params["w_gate"], buf, "expert-gate",
+                               plan, spec="ecd,edf->ecf"))
+        u = linear(params["w_up"], buf, "expert-up", plan,
+                   spec="ecd,edf->ecf")
+        eout = linear(params["w_down"], g * u, "expert-down", plan,
+                      spec="ecf,efd->ecd")
 
-    # gather back with routing weights
-    back = eout[flat_ids, safe_pos]                          # (T*k, d)
-    w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
-    yt = jax.ops.segment_sum(back * w[:, None], tok_idx, num_segments=T)
+        # gather back with routing weights
+        back = eout[flat_ids, safe_pos]                      # (T*k, d)
+        w = (gate_vals.reshape(-1) * keep).astype(x.dtype)
+        yt = jax.ops.segment_sum(back * w[:, None], tok_idx,
+                                 num_segments=T)
     y = yt.reshape(b, l, d)
 
     if m.n_shared_experts:

@@ -23,9 +23,57 @@ def quantize_weight(w):
 
 def dequantize_weight(q, scale, dtype=jnp.float32):
     """Per-output-channel dequant in `dtype` (the canonical expression —
-    every dequant site routes here).  Supports stacked leading axes:
-    q (..., K, N) with scale (..., N)."""
+    the numerical *reference* every fused contraction is tested against).
+    Supports stacked leading axes: q (..., K, N) with scale (..., N).
+
+    The serving hot path no longer calls this per step: `dequant_contract`
+    contracts against the raw int8 weight and applies the scale as an
+    O(batch·d_out) epilogue instead of materializing this O(K·N) array."""
     return q.astype(dtype) * scale.astype(dtype)[..., None, :]
+
+
+def _epilogue_scale(spec: str, scale):
+    """Reshape/transpose a per-output-channel `scale` so it broadcasts
+    against the *output* of `einsum(spec, x, q)`.
+
+    The weight operand's second-to-last letter is the contracted input
+    channel (the repo-wide (..., K, N) weight convention); every other
+    weight letter carries a scale axis.  Returns None when a scale axis
+    does not survive into the output (caller falls back to materializing
+    the dequantized weight — no such spec exists in-repo today)."""
+    ins, out = spec.replace(" ", "").split("->")
+    w_spec = ins.split(",")[1]
+    k = w_spec[-2]
+    s_letters = [c for c in w_spec if c != k]      # scale axis order
+    if any(c not in out for c in s_letters):
+        return None
+    s = jnp.transpose(scale, [s_letters.index(c)
+                              for c in out if c in s_letters])
+    dims = iter(s.shape)
+    return s.reshape([next(dims) if c in s_letters else 1 for c in out])
+
+
+def dequant_contract(x, q, scale, spec: str | None = None, *,
+                     materialize: bool = False):
+    """x · dequant(q, scale) with the per-output-channel scale fused into
+    the matmul *epilogue*: contract against the raw int8 weight (cast to
+    x.dtype — exact for int8 values) and scale the O(batch·d_out) output,
+    instead of materializing the O(K·N) dequantized weight every call.
+    Mathematically identical to the canonical expression up to float
+    reassociation: sum_k x_k·(q_kj·s_j) == (sum_k x_k·q_kj)·s_j.
+
+    `materialize=True` keeps the canonical `dequantize_weight` expression
+    — the parity reference the fused path is tested against."""
+    if not materialize:
+        qx = q.astype(x.dtype)
+        if spec is None:
+            s = scale.astype(x.dtype)
+            return (x @ qx) * (s if q.ndim == 2 else s[..., None, :])
+        s = _epilogue_scale(spec, scale)
+        if s is not None:
+            return jnp.einsum(spec, x, qx) * s.astype(x.dtype)
+    w = dequantize_weight(q, scale, x.dtype)
+    return jnp.einsum(spec, x, w) if spec else x @ w
 
 
 def quantize_tree(params, min_size: int = 1 << 16):
@@ -48,10 +96,12 @@ def planned_linear(x, w_q, w_scale, use_cim_path: bool,
     use_cim_path=False -> plain XLA matmul on the dequantized weights
     (the paper: never deploy CiM for M=1 / low-reuse GEMMs).
 
-    Both branches respect x.dtype: bfloat16 decode activations dequantize
-    the weight straight to bfloat16 (no float32 weight materialization)
-    and return bfloat16; the Pallas kernel accumulates in f32 internally
-    and casts its output back.
+    Both branches respect x.dtype: bfloat16 decode activations contract
+    against the int8 weight in bfloat16 (no float32 weight
+    materialization) and return bfloat16; the Pallas kernel accumulates
+    in f32 internally and casts its output back.  The XLA branch fuses
+    the per-output-channel scale into the matmul epilogue
+    (`dequant_contract`) rather than dequantizing the full weight.
     """
     if use_cim_path:
         from ..kernels import ops
@@ -59,7 +109,7 @@ def planned_linear(x, w_q, w_scale, use_cim_path: bool,
         x2 = x.reshape(-1, x.shape[-1])
         y = ops.int8_matmul(x2, w_q, w_scale, interpret=interpret)
         return y.reshape(*b_shape, w_q.shape[1]).astype(x.dtype)
-    return x @ dequantize_weight(w_q, w_scale, x.dtype)
+    return dequant_contract(x, w_q, w_scale)
 
 
 # weight-leaf names the runtime gate can quantize: every projection that

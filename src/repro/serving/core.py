@@ -91,6 +91,14 @@ class DecodeCore:
     # bound on concurrently-cached jitted batch-step variants (one per
     # distinct plan table the adaptive layer has served)
     max_plan_variants: int = 4
+    # donate the cache argument of both jitted steps so XLA aliases the
+    # KV pools / mamba state into the outputs (in-place update, no
+    # per-token copy of the multi-MB cache).  None resolves per
+    # platform: on accelerators aliasing is the point; on CPU the
+    # aliased program measured ~20% SLOWER (XLA:CPU), so it defaults
+    # off there.  Tests force donate=True to prove the in-place
+    # semantics regardless of platform.
+    donate: bool | None = None
 
     def __post_init__(self):
         if self.max_plan_variants < 1:
@@ -110,10 +118,19 @@ class DecodeCore:
             table = self.verdict_table
             self.plan_table = table if self.gated else table.ungated()
             self.params = quantize_model_params(self.params)
+        if self.donate is None:
+            self.donate = jax.default_backend() != "cpu"
         cfg, rc, plan = self.cfg, self.rc, self.plan_table
+        # when donating, the cache argument is consumed: XLA aliases the
+        # input KV pools / mamba state to the output and updates them in
+        # place instead of copying the multi-MB cache every token.
+        # Callers must rebind (`logits, cache = step(params, cache,
+        # ...)`) and never touch the donated input again — every in-repo
+        # caller does.
         self._step = jax.jit(
             lambda params, cache, tokens, pos:
-            decode_step(params, cache, tokens, pos, cfg, rc, plan=plan))
+            decode_step(params, cache, tokens, pos, cfg, rc, plan=plan),
+            donate_argnums=(1,) if self.donate else ())
 
     # --- planner plumbing (the session-level API, now core-owned) ------
 
@@ -200,12 +217,17 @@ class DecodeCore:
             fn = self._batch_steps.get(plan)
             if fn is None:
                 cfg, rc = self.cfg, self.rc
+                # cache donated like `_step` (same platform gate): the
+                # paged KV block pools, int8-kv scale pools and per-slot
+                # mamba state update in place across steps (no per-token
+                # pool copy)
                 fn = jax.jit(
                     lambda params, cache, tokens, pos, active,
                     block_tables, _plan=plan:
                     decode_step(params, cache, tokens, pos, cfg, rc,
                                 plan=_plan, active=active,
-                                block_tables=block_tables))
+                                block_tables=block_tables),
+                    donate_argnums=(1,) if self.donate else ())
                 self._batch_steps[plan] = fn
             self._batch_steps.move_to_end(plan)
             while len(self._batch_steps) > self.max_plan_variants:

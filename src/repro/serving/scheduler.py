@@ -17,8 +17,21 @@ server:
     through the *same* decode step, one per engine iteration, while the
     other slots keep generating — prefill and decode share the plan
     gate, the executable, and the batch;
+  * a **sync-free token loop**: greedy traffic runs one step ahead of
+    the host — step t's sampled tokens stay on device and feed step t+1
+    directly (a jitted where-select mixes device tokens with host
+    prompt tokens per lane), and the host blocks on step t's tokens
+    only after step t+1 is dispatched.  When the core donates its cache
+    argument (`DecodeCore.donate` — accelerator default), the paged-KV
+    pools update in place (no per-token copy;
+    `telemetry()["aggregate"]["kv_donation_ok"]` probes it on the first
+    step, and stays None when donation is off).  Temperature requests
+    need host logits between steps, so they flip the engine to
+    synchronous retire;
   * **per-request telemetry**: TTFT, queue wait, decode tokens/s, plus
-    engine-level queue depth / slot occupancy / block usage samples;
+    engine-level queue depth / slot occupancy / block usage samples and
+    a `decode_step_breakdown` (dispatch vs host-fetch vs telemetry time
+    per step);
   * **adaptive planning** (optional): an engine given a
     `repro.core.plan_service.PlanService` consults it every step at the
     live operating point (active-slot count, deepest position); when the
@@ -44,6 +57,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..models import period_slots
@@ -137,8 +151,13 @@ class _Slot:
         self.blocks = blocks
         self.pos = 0          # tokens written into this slot's KV/state
         self.n_fed = 0        # prompt tokens consumed so far
-        self.n_gen = 0        # tokens generated so far
-        self.last_tok = None  # last generated token (decode feed)
+        self.n_gen = 0        # tokens generated so far (counted at
+                              # dispatch; retire attributes them)
+        self.last_tok = None  # last retired token (host copy)
+        self.dev_feed = False  # next feed comes from the previous
+                               # step's on-device greedy tokens
+        self.draining = False  # hit max_new_tokens at dispatch: excluded
+                               # from further steps, evicted at retire
 
     @property
     def prefilling(self) -> bool:
@@ -147,6 +166,20 @@ class _Slot:
     def next_token(self):
         return (self.req.prompt[self.n_fed] if self.prefilling
                 else self.last_tok)
+
+
+class _InFlight:
+    """One dispatched-but-not-retired decode step (the one-step-deep
+    async queue of the sync-free token loop): the device-resident logits
+    and greedy tokens plus the attribution records deciding which lanes'
+    tokens belong to which requests once the host looks."""
+
+    __slots__ = ("logits", "greedy", "recs")
+
+    def __init__(self, logits, greedy, recs):
+        self.logits = logits
+        self.greedy = greedy
+        self.recs = recs      # [(lane, slot, is_first, is_final), ...]
 
 
 class ContinuousBatchingEngine:
@@ -164,7 +197,8 @@ class ContinuousBatchingEngine:
     def __init__(self, core: DecodeCore, n_slots: int, max_len: int,
                  block_size: int = 8, n_kv_blocks: int | None = None,
                  seed: int = 0, record_logits: bool = False,
-                 plan_service=None,
+                 plan_service=None, pipeline: bool = True,
+                 telemetry_every: int = 1,
                  clock: Callable[[], float] = time.perf_counter):
         if core.cfg.family == "vlm":
             raise NotImplementedError(
@@ -196,12 +230,28 @@ class ContinuousBatchingEngine:
         self.slots: list[_Slot | None] = [None] * n_slots
         self._key = jax.random.PRNGKey(seed)
         self._t0: float | None = None
+        # sync-free token loop: step t's host fetch overlaps step t+1's
+        # dispatch.  Temperature sampling needs host logits before the
+        # next feed, so any temperature>0 submit flips the engine to
+        # synchronous retire (pipeline=False forces it outright).
+        self.pipeline = pipeline
+        self.telemetry_every = max(1, telemetry_every)
+        self._sync = False
+        self._inflight: _InFlight | None = None
+        self._device_toks = None      # prev step's greedy (device)
+        self._select_fn = None        # jitted host/device token mix
+        self._greedy_fn = None        # jitted greedy sampler
+        self.donation_ok: bool | None = None  # cache-donation probe
         # counters + per-step samples (the telemetry block)
         self.completed: list[Request] = []
         self.evictions = 0
         self.steps = 0
         self.queue_depth_samples: list[int] = []
         self.occupancy_samples: list[float] = []
+        # decode_step_breakdown accumulators (seconds)
+        self.dispatch_s = 0.0
+        self.host_fetch_s = 0.0
+        self.telemetry_s = 0.0
         # adaptive planning: current plan + hot-swap telemetry
         self.plan_service = plan_service
         self._plan = core.plan_table
@@ -236,6 +286,11 @@ class ContinuousBatchingEngine:
                 f"request {req.rid} needs {self._blocks_needed(req)} KV "
                 f"blocks; the pool only has {self.allocator.n_blocks}")
         req.prompt = np.asarray(req.prompt, np.int32)
+        if req.temperature > 0.0:
+            # the pipelined loop feeds on-device greedy tokens; a
+            # categorical draw needs host logits before the next feed,
+            # so temperature traffic degrades to synchronous retire
+            self._sync = True
         req.state = "queued"
         req.t_submit = self._now()
         self.queue.append(req)
@@ -284,7 +339,11 @@ class ContinuousBatchingEngine:
         toks = np.zeros(shape, np.int32)
         for i, st in enumerate(self.slots):
             if st is not None:
-                toks[i, 0] = st.next_token()
+                tok = st.next_token()
+                # a pipelined slot's last token may still be on device
+                # (retired next step); its lane is overridden by the
+                # device-token select in _dispatch, so 0 is a dead value
+                toks[i, 0] = 0 if tok is None else tok
         return toks
 
     def _consult_plan_service(self) -> None:
@@ -311,72 +370,189 @@ class ContinuousBatchingEngine:
         near-zero when the variant is already compiled."""
         t0 = self.clock()
         fn = self.core.batch_step_for(table)
-        warm = fn(self.core.params, self.cache, self._token_batch(),
-                  np.zeros(self.n_slots, np.int32),
-                  np.zeros(self.n_slots, bool), self.block_tables)
-        jax.block_until_ready(warm)
+        # the warm call donates self.cache like every step; all lanes
+        # are inactive so the returned cache is contents-identical —
+        # rebind it (the donated input buffers are gone)
+        warm_toks = self._mix_tokens(self._token_batch(),
+                                     np.zeros(self.n_slots, bool))
+        warm_logits, warmed = fn(self.core.params, self.cache, warm_toks,
+                                 np.zeros(self.n_slots, np.int32),
+                                 np.zeros(self.n_slots, bool),
+                                 self.block_tables)
+        jax.block_until_ready(warm_logits)
+        self.cache = warmed
         self.swap_latencies_s.append(self.clock() - t0)
         self._plan = table
         self._step_fn = fn
         self.plan_swaps += 1
 
+    @property
+    def _pipelined(self) -> bool:
+        return self.pipeline and not self._sync
+
+    def _mix_tokens(self, host_toks: np.ndarray, use_dev: np.ndarray):
+        """Per-lane token feed: the previous step's on-device greedy
+        token where `use_dev`, the host token (prompt / synchronous
+        last_tok) elsewhere.  Tokens ALWAYS flow through the jitted
+        select — even all-host batches — because the decode step's jit
+        cache keys on input sharding/commitment, and mixing raw numpy
+        steps with select-output steps would compile the program
+        twice."""
+        if self._select_fn is None:
+            self._select_fn = jax.jit(jnp.where)
+        mask = use_dev.reshape((self.n_slots, 1)
+                               + (1,) * (host_toks.ndim - 2))
+        dev = (self._device_toks if self._device_toks is not None
+               else host_toks)
+        return self._select_fn(mask, dev, host_toks)
+
     def step(self) -> bool:
         """One engine iteration.  Returns False when idle (nothing
-        active and nothing admissible)."""
+        active, nothing admissible, nothing in flight).
+
+        Pipelined (the default, greedy traffic): dispatch step *t* to
+        the device first, *then* block on step *t-1*'s tokens — the host
+        fetch of one step overlaps the device compute of the next.
+        Synchronous (temperature traffic / pipeline=False): dispatch and
+        retire the same step, the pre-pipeline behavior."""
+        if not self._pipelined and self._inflight is not None:
+            self._retire(self._inflight)    # mode flipped: flush first
+        t0 = self.clock()
         self._admit()
-        self.queue_depth_samples.append(len(self.queue))
-        self.occupancy_samples.append(self.active_slots / self.n_slots)
-        if self.active_slots == 0:
+        if self.steps % self.telemetry_every == 0:
+            self.queue_depth_samples.append(len(self.queue))
+            self.occupancy_samples.append(self.active_slots / self.n_slots)
+        self.telemetry_s += self.clock() - t0
+        if not any(s is not None and not s.draining for s in self.slots):
+            if self._inflight is not None:
+                self._retire(self._inflight)
+                return True
             return False
         if self.plan_service is not None:
             self._consult_plan_service()
         if self._step_fn is None:
             self._step_fn = self.core.batch_step_for(self._plan)
-        tokens = self._token_batch()
+        prev = self._inflight
+        self._inflight = self._dispatch()
+        if prev is not None:
+            self._retire(prev, keep_inflight=True)
+        if not self._pipelined:
+            self._retire(self._inflight)
+        return True
+
+    def _dispatch(self) -> _InFlight:
+        """Enqueue one decode step on the device and account for it.
+
+        Token feed is device-resident: a lane whose previous token is
+        still in flight takes it from the prior step's on-device greedy
+        array (no host round-trip); prompt lanes and synchronous-mode
+        lanes take host tokens.  All per-slot bookkeeping (pos / fed /
+        generated counts, max-token draining) happens here, at dispatch;
+        `_retire` only attributes the finished tokens to requests."""
+        t0 = self.clock()
+        host_toks = self._token_batch()
         pos = np.array([0 if s is None else s.pos for s in self.slots],
                        np.int32)
-        active = np.array([s is not None for s in self.slots], bool)
+        active = np.array([s is not None and not s.draining
+                           for s in self.slots], bool)
+        use_dev = np.array([s is not None and s.dev_feed
+                            and not s.prefilling for s in self.slots],
+                           bool)
+        tokens = self._mix_tokens(host_toks, use_dev)
+        probe = None
+        if self.donation_ok is None and self.core.donate:
+            probe = next((leaf for leaf in jax.tree.leaves(self.cache)
+                          if hasattr(leaf, "is_deleted")), None)
         logits, self.cache = self._step_fn(
             self.core.params, self.cache, tokens, pos, active,
             self.block_tables)
+        if probe is not None:
+            # the jitted step donates its cache argument; if XLA
+            # accepted the donation the input buffer is dead the moment
+            # the call is dispatched (pools update in place, no copy)
+            self.donation_ok = bool(probe.is_deleted())
+        if self._greedy_fn is None:
+            cfg = self.cfg
+            self._greedy_fn = jax.jit(
+                lambda lg: sample_token(cfg, lg, 0.0, None))
+        greedy = self._greedy_fn(logits)
+        self._device_toks = greedy
         self.steps += 1
-        greedy = np.asarray(jax.device_get(
-            sample_token(self.cfg, logits, 0.0, None)))
-        now = self._now()
+        recs = []
         for i, st in enumerate(self.slots):
-            if st is None:
+            if st is None or st.draining:
                 continue
             fed_prompt = st.prefilling
             st.pos += 1
             if fed_prompt:
                 st.n_fed += 1
                 if st.prefilling:
+                    st.dev_feed = False
                     continue        # mid-prompt: sampled token discarded
-            tok = self._sample_slot(i, st, logits, greedy)
             st.n_gen += 1
-            st.last_tok = tok
+            st.dev_feed = True
+            final = st.n_gen >= st.req.max_new_tokens
+            if final:
+                # final token: stop dispatching this lane now (the KV
+                # horizon is exactly spent); the slot is evicted when
+                # this step retires
+                st.draining = True
+            recs.append((i, st, st.n_gen == 1, final))
+        self.dispatch_s += self.clock() - t0
+        return _InFlight(logits, greedy, recs)
+
+    def _retire(self, inf: _InFlight, keep_inflight: bool = False) -> None:
+        """Block on one dispatched step's tokens and attribute them:
+        append to requests, stamp TTFT, record first-logits (one batched
+        transfer for exactly the lanes that produced their first token),
+        and evict EOS / max-token slots."""
+        if not keep_inflight:
+            self._inflight = None
+        elif self._inflight is inf:
+            self._inflight = None
+        t0 = self.clock()
+        greedy = np.asarray(inf.greedy)     # blocks until the step ran
+        first_rows = {}
+        if self.record_logits:
+            idxs = [i for i, st, first, _ in inf.recs
+                    if first and st.req.state != "done"]
+            if idxs:
+                rows = np.asarray(
+                    jax.device_get(inf.logits[np.array(idxs), -1]),
+                    np.float32)
+                first_rows = dict(zip(idxs, rows))
+        self.host_fetch_s += self.clock() - t0
+        now = self._now()
+        for i, st, first, final in inf.recs:
             req = st.req
+            if req.state == "done":
+                continue    # evicted at an earlier retire (EOS lag):
+                            # this lane's speculative token is discarded
+            tok = self._sample_slot(i, st, inf.logits, greedy)
+            st.last_tok = tok
             req.tokens.append(tok)
-            if st.n_gen == 1:
+            if first:
                 req.t_first = now
-                if self.record_logits:
-                    req.first_logits = np.asarray(
-                        jax.device_get(logits[i, -1]), np.float32)
+                if i in first_rows:
+                    req.first_logits = first_rows[i]
             hit_eos = (req.eos_id is not None
                        and self.cfg.family != "audio"
                        and int(tok) == req.eos_id)
-            if hit_eos or st.n_gen >= req.max_new_tokens:
+            if hit_eos or final:
                 self._evict(i, "eos" if hit_eos else "max_tokens", now)
-        return True
+        if not self._pipelined:
+            self._device_toks = None    # sync mode: host tokens only
 
     def _sample_slot(self, i: int, st: _Slot, logits, greedy):
         """Next token for slot i: batchwide greedy argmax unless the
         request asked for temperature sampling (then a per-slot
-        categorical draw from the engine's PRNG stream)."""
+        categorical draw from the engine's PRNG stream — synchronous
+        mode only, see `submit`)."""
         if st.req.temperature <= 0.0:
             return greedy[i, 0]
         self._key, sub = jax.random.split(self._key)
-        row = logits[i, -1].astype(np.float32) / st.req.temperature
+        row = np.asarray(jax.device_get(logits[i, -1]),
+                         np.float32) / st.req.temperature
         tok = jax.random.categorical(sub, row, axis=-1)
         return np.asarray(jax.device_get(tok), np.int32)
 
@@ -490,9 +666,32 @@ class ContinuousBatchingEngine:
                           "block_size": self.block_size,
                           "peak_in_use": self.allocator.peak_in_use},
             "decode_executables": self.decode_executables,
+            "kv_donation_ok": self.donation_ok,
+            "decode_step_breakdown": self._step_breakdown(),
         }
         return {"requests": reqs, "aggregate": agg,
                 "adaptive": self._adaptive_telemetry()}
+
+    def _step_breakdown(self) -> dict:
+        """Where the per-step host budget goes: device dispatch (token
+        select + step call + bookkeeping), blocking host fetches
+        (tokens / first-logits at retire), and telemetry sampling.
+        Pipelined engines overlap the fetch of step t with the compute
+        of step t+1, so fetch time here is host *blocked* time, not
+        device time."""
+        n = max(1, self.steps)
+        return {
+            "steps": self.steps,
+            "pipelined": self._pipelined,
+            "dispatch_s": round(self.dispatch_s, 6),
+            "host_fetch_s": round(self.host_fetch_s, 6),
+            "telemetry_s": round(self.telemetry_s, 6),
+            "dispatch_ms_per_step": round(1e3 * self.dispatch_s / n, 4),
+            "host_fetch_ms_per_step": round(1e3 * self.host_fetch_s / n,
+                                            4),
+            "telemetry_ms_per_step": round(1e3 * self.telemetry_s / n,
+                                           4),
+        }
 
     def _adaptive_telemetry(self) -> dict | None:
         """The telemetry()["adaptive"] block: bucket transitions, plan
