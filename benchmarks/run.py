@@ -14,6 +14,7 @@ from . import paper_benches as P
 from . import llm_planner_bench as L
 from . import sweep_bench as S
 from . import serve_gating_bench as G
+from . import campaign_bench as C
 
 BENCHES = [
     ("fig2_gemm_landscape", P.fig2_gemm_landscape),
@@ -25,6 +26,7 @@ BENCHES = [
     ("table6_workload_characteristics", P.table6_workload_characteristics),
     ("llm_planner_decisions", L.planner_decisions),
     ("planner_sweep_speed", S.planner_sweep_speed),
+    ("campaign_speed", C.campaign_speed),
     ("serve_gating_speed", G.serve_gating_speed),
 ]
 

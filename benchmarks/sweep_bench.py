@@ -334,6 +334,16 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
              "seconds": round(pallas_s, 4)}] + large_rows
     if write_json:
         out = os.environ.get("BENCH_PLANNER_OUT", "BENCH_planner.json")
+        # preserve the campaign bench's block if already recorded (the
+        # two benches share the file; each owns its keys)
+        if os.path.exists(out):
+            try:
+                with open(out) as f:
+                    prev = json.load(f)
+                if "campaign" in prev:
+                    derived["campaign"] = prev["campaign"]
+            except (json.JSONDecodeError, OSError):
+                pass
         if (derived["verdict_mismatches"]
                 or derived["greedy_verdict_mismatches"]
                 or pallas_mismatches

@@ -7,10 +7,15 @@ Public surface:
   decide / plan_workload (the what/when/where planner).
 """
 from .baseline import evaluate_baseline
+from .campaign import (CampaignResult, CampaignSpec, Constraint,
+                       build_config, certify_front, certify_point,
+                       run_campaign)
 from .cost_model import Metrics, evaluate, evaluate_cim
 from .gemm import GEMM, attention_gemms, conv2d_gemm, fc_gemm
 from .heuristic import random_search
 from .mapping import CiMMapping, priority_map
+from .pareto import (ParetoAccumulator, dominates, pareto_mask,
+                     pareto_mask_np)
 from .memory import (DRAM, LEVELS, RF, SMEM, CiMSystemConfig, configb_count,
                      iso_area_primitive_count)
 from .plan_service import BucketLattice, PlanService
@@ -42,4 +47,7 @@ __all__ = [
     "SweepEngine", "decide_batched", "plan_workload_batched",
     "sweep_evaluate", "sweep_evaluate_baseline",
     "BucketLattice", "PlanService",
+    "CampaignSpec", "CampaignResult", "Constraint", "build_config",
+    "run_campaign", "certify_point", "certify_front",
+    "ParetoAccumulator", "dominates", "pareto_mask", "pareto_mask_np",
 ]

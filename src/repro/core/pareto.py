@@ -1,0 +1,184 @@
+"""Multi-objective Pareto reduction for design-space campaigns.
+
+The campaign layer (repro.core.campaign) scores 100k+-point design grids
+and keeps only the interesting ones: the non-dominated frontier over
+(energy, latency, area proxy).  This module provides the reduction in
+three layers, pinned to each other by the property-based suite in
+tests/test_pareto_properties.py:
+
+  * `dominates(a, b)` / `pareto_mask_ref(points)` — the scalar O(n²)
+    reference semantics.  `a` dominates `b` iff a <= b on every
+    objective and a < b on at least one (all objectives minimized).
+    Exact ties dominate in neither direction, so duplicate points stay
+    on the front together — which is what makes the front, as a set,
+    invariant under row permutation.
+  * `pareto_mask(points)` — the same predicate as one vectorized,
+    jit-compatible kernel: an (n, d) objective matrix in, an (n,) keep
+    mask out, all pairs compared by broadcast.  `pareto_mask_np` is the
+    host entry point: it pads to a power of two with +inf rows (bounding
+    jit retraces to O(log n), like the sweep engine) and runs the jitted
+    kernel; +inf padding rows can never dominate a row with any finite
+    objective, so the real rows' verdicts are unaffected.
+  * `ParetoAccumulator` — cross-chunk front merging.  Campaign grids
+    stream through the sweep engine chunk by chunk; the accumulator
+    folds each chunk's survivors into a running front using the identity
+    pareto(A ∪ B) == pareto(pareto(A) ∪ pareto(B)), so host memory holds
+    O(front + chunk) rows, never the whole grid.  `front()` returns the
+    rows sorted by their caller-assigned global index — the front is a
+    set, so index-sorted emission makes the output byte-identical no
+    matter how the stream was cut into chunks (the golden campaign CSV
+    depends on this).
+
+All comparisons happen in float32 — the dtype the sweep backends emit —
+so the vectorized kernel, the reference, and the accumulator agree
+bitwise.  Rows with non-finite objectives (invalid mappings get +inf
+energy/time) should be filtered out before reduction; campaign.py does.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def dominates(a, b) -> bool:
+    """Scalar reference: does point `a` dominate point `b`?
+
+    True iff a <= b on every objective and a < b on at least one (all
+    objectives minimized).  Irreflexive by construction: a point never
+    dominates itself, and exact duplicates dominate in neither
+    direction."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+def pareto_mask_ref(points) -> np.ndarray:
+    """O(n²) reference front mask: keep[j] iff no row dominates row j.
+
+    The brute-force semantics the vectorized kernel is property-tested
+    against (tests/test_pareto_properties.py asserts bitwise equality,
+    ties and degenerate single-point sets included)."""
+    pts = np.asarray(points, np.float32)
+    n = pts.shape[0]
+    keep = np.ones(n, bool)
+    for j in range(n):
+        for i in range(n):
+            if i != j and dominates(pts[i], pts[j]):
+                keep[j] = False
+                break
+    return keep
+
+
+def pareto_mask(points):
+    """Vectorized, jit-compatible front mask over an (n, d) objective
+    matrix (all objectives minimized): returns an (n,) bool array, True
+    for non-dominated rows.
+
+    One broadcastized all-pairs comparison — le[i, j] is "i <= j on
+    every objective", lt[i, j] is "i < j on at least one" — so row j is
+    dominated iff any i has both.  O(n²d) work and O(n²) memory: callers
+    reducing large streams tile the input (`ParetoAccumulator`) instead
+    of growing n."""
+    pts = jnp.asarray(points, jnp.float32)
+    le = jnp.all(pts[:, None, :] <= pts[None, :, :], axis=-1)
+    lt = jnp.any(pts[:, None, :] < pts[None, :, :], axis=-1)
+    return ~jnp.any(le & lt, axis=0)
+
+
+_MASK_JIT = jax.jit(pareto_mask)
+
+
+def _pad_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def pareto_mask_np(points) -> np.ndarray:
+    """Host entry point for the jitted kernel: pad the (n, d) matrix to
+    the next power of two with +inf rows (bounds compiled variants to
+    O(log n) shapes), run `pareto_mask`, slice the real rows back.
+
+    An all-+inf pad row is <= a real row only where that row is also
+    +inf and is never strictly < it there, so padding cannot change any
+    real row's verdict."""
+    pts = np.asarray(points, np.float32)
+    if pts.ndim != 2:
+        raise ValueError(f"points must be (n, d), got shape {pts.shape}")
+    n = pts.shape[0]
+    if n == 0:
+        return np.zeros(0, bool)
+    m = _pad_pow2(n)
+    if m != n:
+        pts = np.concatenate(
+            [pts, np.full((m - n, pts.shape[1]), np.inf, np.float32)])
+    return np.asarray(_MASK_JIT(pts))[:n]
+
+
+class ParetoAccumulator:
+    """Streaming front reduction with cross-chunk merging.
+
+    Feed chunks of (points, indices) in any order and any cut; the
+    accumulator keeps only the running non-dominated set, so memory is
+    bounded by O(front + chunk) rows.  Correctness rests on
+    pareto(A ∪ B) == pareto(pareto(A) ∪ pareto(B)): each update reduces
+    the incoming chunk, concatenates it with the running front, and
+    re-reduces the union.
+
+    `indices` are caller-assigned global identifiers (the campaign uses
+    the point's grid-enumeration index); `front()` emits the surviving
+    rows sorted by index, which makes the result independent of chunk
+    placement byte for byte — the property suite asserts equality with
+    the whole-batch `pareto_mask_np` under random splits and row
+    permutations.
+    """
+
+    def __init__(self, n_objectives: int):
+        if n_objectives < 1:
+            raise ValueError(
+                f"n_objectives must be >= 1, got {n_objectives}")
+        self.n_objectives = n_objectives
+        self._points = np.zeros((0, n_objectives), np.float32)
+        self._indices = np.zeros(0, np.int64)
+        self.rows_seen = 0
+        self.chunks_merged = 0
+
+    def update(self, points, indices) -> None:
+        """Fold one chunk of candidate rows into the running front."""
+        pts = np.asarray(points, np.float32)
+        idx = np.asarray(indices, np.int64)
+        if pts.ndim != 2 or pts.shape[1] != self.n_objectives:
+            raise ValueError(
+                f"expected (n, {self.n_objectives}) points, "
+                f"got shape {pts.shape}")
+        if idx.shape != (pts.shape[0],):
+            raise ValueError(
+                f"indices shape {idx.shape} does not match "
+                f"{pts.shape[0]} points")
+        if not np.isfinite(pts).all():
+            raise ValueError(
+                "non-finite objectives reached the front reduction — "
+                "filter invalid rows before accumulating")
+        self.rows_seen += pts.shape[0]
+        self.chunks_merged += 1
+        if pts.shape[0] == 0:
+            return
+        keep = pareto_mask_np(pts)               # reduce the chunk first
+        cat = np.concatenate([self._points, pts[keep]])
+        cat_idx = np.concatenate([self._indices, idx[keep]])
+        keep = pareto_mask_np(cat)               # then the union
+        self._points = cat[keep]
+        self._indices = cat_idx[keep]
+
+    def __len__(self) -> int:
+        return int(self._points.shape[0])
+
+    def front(self) -> tuple[np.ndarray, np.ndarray]:
+        """(points, indices) of the current front, sorted by index
+        ascending — the canonical emission order (chunk-placement- and
+        permutation-independent, since the front itself is a set)."""
+        order = np.argsort(self._indices, kind="stable")
+        return self._points[order], self._indices[order]

@@ -175,7 +175,18 @@ def summarize(decisions: Sequence[Decision]) -> dict:
     energy_gain_x compares the baseline against each GEMM's *deployable*
     option — d.options[d.best_energy], the eligible winner decide() would
     actually pick — not the unconstrained min-energy option, which could
-    be a config the throughput floor rules out."""
+    be a config the throughput floor rules out.
+
+    Raises ValueError on an empty decision list: an all-zero aggregate
+    is indistinguishable from a real workload where CiM never wins, and
+    campaign certification legitimately produces empty contract-filtered
+    subsets that must be reported as such, not as zeros."""
+    if not decisions:
+        raise ValueError(
+            "summarize() needs at least one Decision — an empty list "
+            "would silently aggregate to all zeros (campaign "
+            "certification filters can produce empty subsets; report "
+            "them explicitly instead)")
     n = len(decisions)
     cim_frac = sum(d.use_cim for d in decisions) / max(1, n)
     wheres: dict[str, int] = {}

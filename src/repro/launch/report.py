@@ -258,6 +258,50 @@ def serve_adaptive_table(bench: dict) -> str:
     return "\n".join(lines)
 
 
+def campaign_table(report: dict) -> str:
+    """Campaign summary from results/campaign/campaign_report.json
+    (repro.launch.campaign): grid provenance, constraint accounting,
+    and the certification gate's verdict per champion design point."""
+    if not report:
+        return "(no campaign report — run " \
+               "python -m repro.launch.campaign)"
+    r = report.get("report", {})
+    spec = r.get("spec", {})
+    stats = r.get("stats", {})
+    fr = report.get("frontier_csv", {})
+    lines = [
+        f"grid: {spec.get('n_points', '?')} points "
+        f"({len(spec.get('workloads', []))} cells x "
+        f"{spec.get('n_units', '?')} units), "
+        f"digest {spec.get('digest', '?')}, "
+        f"backend {r.get('group_by', '?')}/{r.get('backend', '?')}",
+        f"frontier: {fr.get('rows', '?')} rows, "
+        f"sha256 {str(fr.get('sha256', '?'))[:16]}",
+    ]
+    filt = stats.get("constraint_filtered") or {}
+    if filt:
+        lines.append("contracts: " + ", ".join(
+            f"{spec_} filtered {n}" for spec_, n in filt.items()))
+    cert = report.get("certification") or {}
+    pts = cert.get("points") or []
+    if pts:
+        lines += ["",
+                  "| group | champion config | order | bitwise | "
+                  "contracts | CiM deployed |",
+                  "|---|---|---|---|---|---|"]
+        for p in pts:
+            pl = p.get("planner", {})
+            lines.append(
+                f"| {p['group']} | {p['config']} | {p['order_mode']} | "
+                f"{'ok' if p['bitwise_ok'] else 'FAIL'} | "
+                f"{'ok' if p['contracts_ok'] else 'FAIL'} | "
+                f"{pl.get('n_use_cim', '?')}/{p.get('n_gemms', '?')} |")
+        lines.append(f"\ncertification: "
+                     f"{'OK' if cert.get('ok') else 'FAILED'} "
+                     f"({len(pts)} champion points)")
+    return "\n".join(lines)
+
+
 def summarize(cells: list[dict]) -> dict:
     ok = [c for c in cells if c["status"] == "ok"]
     skipped = [c for c in cells if c["status"] == "skipped"]
@@ -304,5 +348,13 @@ if __name__ == "__main__":
         print("\n## Adaptive planning (bucket hit rates, verdict "
               "flips, plan swaps)\n")
         print(serve_adaptive_table(bench))
+    campaign_path = os.environ.get("CAMPAIGN_REPORT",
+                                   "results/campaign/campaign_report.json")
+    if os.path.exists(campaign_path):
+        with open(campaign_path) as f:
+            campaign = json.load(f)
+        print("\n## Design-space campaign (Pareto fronts + "
+              "certification)\n")
+        print(campaign_table(campaign))
     print("\n## Summary\n")
     print(json.dumps(summarize(cells), indent=1))

@@ -1,0 +1,285 @@
+"""Unit tests for the design-space campaign subsystem (ISSUE 9
+tentpole): grid spec enumeration, constraint contracts, streaming front
+reduction in both grouping modes, block/chunk-boundary determinism, the
+certification gate's bitwise re-evaluation, and the
+`planner.summarize()` empty-input regression the certification path
+exercises."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES
+from repro.core.campaign import (CIM_LEVELS, FRONT_FIELDS, OBJECTIVES,
+                                 CampaignSpec, Constraint,
+                                 area_proxy_bytes, build_config,
+                                 certify_front, certify_point,
+                                 run_campaign)
+from repro.core.llm_workloads import gemms_of_model
+from repro.core.memory import RF, configb_count, iso_area_primitive_count
+from repro.core.pareto import dominates
+from repro.core.planner import summarize
+from repro.core.primitives import PRIMITIVES
+from repro.core.sweep import SweepEngine
+
+SMALL = CampaignSpec(
+    workloads=(("mistral-nemo-12b", "train_4k"),),
+    prototypes=("Analog-8T", "Digital-8T"),
+    levels=CIM_LEVELS,
+    scales=(1.0, 4.0),
+    order_modes=("exact",),
+)
+
+
+# --- grid spec ---------------------------------------------------------------
+
+
+def test_build_config_levels():
+    prim = PRIMITIVES["Digital-8T"]
+    rf = build_config("Digital-8T", "RF")
+    assert rf.cim_level == "RF"
+    assert rf.resolved_n_prims() == iso_area_primitive_count(RF, prim)
+    a = build_config("Digital-8T", "SMEM-A")
+    assert a.cim_level == "SMEM"
+    assert a.resolved_n_prims() == iso_area_primitive_count(RF, prim)
+    b = build_config("Digital-8T", "SMEM-B")
+    assert b.resolved_n_prims() == configb_count(prim)
+    # the scale axis multiplies the level's base budget
+    assert build_config("Digital-8T", "RF", 4.0).resolved_n_prims() \
+        == 4 * rf.resolved_n_prims()
+    # and tiny scales clamp to one primitive, never zero
+    assert build_config("Digital-8T", "RF", 1e-9).resolved_n_prims() == 1
+
+
+def test_build_config_rejects_bad_axes():
+    with pytest.raises(ValueError, match="unknown CiM prototype"):
+        build_config("SRAM-9T", "RF")
+    with pytest.raises(ValueError, match="unknown cache level"):
+        build_config("Digital-8T", "DRAM")
+    with pytest.raises(ValueError, match="scale"):
+        build_config("Digital-8T", "RF", 0.0)
+
+
+def test_area_proxy_scales_with_budget_and_overhead():
+    cfg = build_config("Analog-8T", "RF", 2.0)
+    prim = PRIMITIVES["Analog-8T"]
+    assert area_proxy_bytes(cfg) == pytest.approx(
+        cfg.resolved_n_prims() * prim.capacity_bytes
+        * prim.area_overhead)
+    # 8T analog pays more area than 6T digital at the same count
+    a6 = build_config("Digital-8T", "RF")
+    assert area_proxy_bytes(cfg) / cfg.resolved_n_prims() \
+        > area_proxy_bytes(a6) / a6.resolved_n_prims()
+
+
+def test_spec_validates_axes():
+    with pytest.raises(ValueError, match="unknown arch"):
+        CampaignSpec(workloads=(("not-a-model", "train_4k"),))
+    with pytest.raises(ValueError, match="unknown shape"):
+        CampaignSpec(workloads=(("mistral-nemo-12b", "train_9q"),))
+    with pytest.raises(ValueError, match="at least one workload"):
+        CampaignSpec(workloads=())
+    with pytest.raises(ValueError):
+        CampaignSpec(order_modes=("sideways",))
+    with pytest.raises(ValueError, match="precision"):
+        CampaignSpec(precisions=(0,))
+
+
+def test_spec_lazy_enumeration_and_counts():
+    n_gemms = len(gemms_of_model(ARCHS["mistral-nemo-12b"],
+                                 SHAPES["train_4k"]))
+    assert SMALL.n_points == n_gemms * SMALL.n_units
+    it = SMALL.iter_points()
+    assert not isinstance(it, (list, tuple))     # generator, not a grid
+    seen = [p.index for p in it]
+    assert seen == list(range(SMALL.n_points))   # canonical enumeration
+
+
+def test_serialize_axis_is_rf_only():
+    """serialize_primitives is a cost-model no-op at SMEM: crossing it
+    there would put exact-duplicate points on every front, so non-RF
+    levels take one serialize mode only."""
+    spec = CampaignSpec(workloads=(("mistral-nemo-12b", "train_4k"),),
+                        prototypes=("Digital-8T",),
+                        serialize_modes=(True, False))
+    units = spec.units()
+    assert spec.n_units == len(units)
+    rf = [u for u in units if u.level == "RF"]
+    smem = [u for u in units if u.level != "RF"]
+    assert {u.serialize for u in rf} == {True, False}
+    assert {u.serialize for u in smem} == {True}
+
+
+def test_spec_digest_tracks_axes():
+    assert SMALL.digest() == SMALL.digest()
+    other = CampaignSpec(workloads=SMALL.workloads,
+                         prototypes=SMALL.prototypes,
+                         levels=SMALL.levels, scales=(1.0, 8.0),
+                         order_modes=SMALL.order_modes)
+    assert other.digest() != SMALL.digest()
+
+
+# --- constraint contracts ----------------------------------------------------
+
+
+def test_constraint_parse_roundtrip():
+    c = Constraint.parse("time_ns<=2e9")
+    assert (c.metric, c.op, c.bound) == ("time_ns", "<=", 2e9)
+    assert c.spec() == "time_ns<=2e+09"
+    assert Constraint.parse(c.spec()) == c
+    g = Constraint.parse("tops_per_w>=1.5")
+    assert g.check(2.0) and not g.check(1.0)
+    assert c.check(1e9) and not c.check(3e9)
+
+
+def test_constraint_mask_vectorized():
+    c = Constraint("area_bytes", "<=", 100.0)
+    cols = {"area_bytes": np.asarray([50.0, 150.0, 100.0])}
+    assert c.mask(cols).tolist() == [True, False, True]
+
+
+def test_constraint_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown constraint metric"):
+        Constraint.parse("joules<=1")
+    with pytest.raises(ValueError, match="bad constraint"):
+        Constraint.parse("time_ns=1e9")
+    with pytest.raises(ValueError, match="bad constraint"):
+        Constraint.parse("time_ns<=fast")
+    with pytest.raises(ValueError, match="finite"):
+        Constraint("time_ns", "<=", float("inf"))
+
+
+# --- streaming front reduction -----------------------------------------------
+
+
+def test_workload_mode_aggregates_count_weighted(engine):
+    result = run_campaign(SMALL, engine=engine, block_points=64)
+    assert result.front, "front must not be empty"
+    row = result.front[0]
+    assert set(FRONT_FIELDS) <= set(row)
+    # recompute the row's objectives by hand: count-weighted sums over
+    # the cell's GEMMs under the row's unit, in enumeration order
+    unit = SMALL.units()[row["index"]]
+    gemms = gemms_of_model(ARCHS["mistral-nemo-12b"], SHAPES["train_4k"])
+    mets = engine.cim_metrics([(g, unit.cfg) for g in gemms],
+                              unit.order_mode)
+    energy = time = 0.0
+    for g, m in zip(gemms, mets):
+        energy += m.energy_pj * g.count
+        time += m.time_ns * g.count
+    assert row["energy_pj"] == energy
+    assert row["time_ns"] == time
+    assert row["area_bytes"] == unit.area_bytes
+    assert row["n_gemms"] == len(gemms)
+
+
+def test_front_rows_are_nondominated(engine):
+    result = run_campaign(SMALL, engine=engine, group_by="gemm",
+                          block_points=64)
+    by_group: dict[tuple, list[dict]] = {}
+    for r in result.front:
+        by_group.setdefault((r["group"], r["label"], r["M"]),
+                            []).append(r)
+    assert len(by_group) == result.stats["n_groups"]
+    for rows in by_group.values():
+        pts = [[r[o] for o in OBJECTIVES] for r in rows]
+        for i, a in enumerate(pts):
+            for j, b in enumerate(pts):
+                assert not (i != j and dominates(a, b)), (a, b)
+
+
+def test_contracts_filter_before_reduction(engine):
+    base = run_campaign(SMALL, engine=engine, block_points=64)
+    cap = min(r["area_bytes"] for r in base.front)
+    tight = (Constraint("area_bytes", "<=", cap),)
+    got = run_campaign(SMALL, tight, engine=engine, block_points=64)
+    assert all(r["area_bytes"] <= cap for r in got.front)
+    assert got.stats["constraint_filtered"][tight[0].spec()] > 0
+    # an unsatisfiable contract empties the front but still reports
+    none = run_campaign(SMALL, (Constraint("area_bytes", "<=", 0.5),),
+                        engine=engine, block_points=64)
+    assert none.front == []
+    assert none.stats["points_evaluated"] == SMALL.n_points
+
+
+def test_block_and_chunk_boundaries_do_not_change_the_csv(engine):
+    a = run_campaign(SMALL, engine=engine, block_points=SMALL.n_points,
+                     group_by="gemm").csv_text()
+    chunked = SweepEngine(mesh=None, chunk_rows=96)
+    b = run_campaign(SMALL, engine=chunked, block_points=5,
+                     group_by="gemm").csv_text()
+    assert a == b
+    assert chunked.cache_info()["chunks"]["evaluated"] >= 2
+
+
+def test_run_campaign_rejects_bad_args(engine):
+    with pytest.raises(ValueError, match="unknown group_by"):
+        run_campaign(SMALL, engine=engine, group_by="prototype")
+    with pytest.raises(ValueError, match="block_points"):
+        run_campaign(SMALL, engine=engine, block_points=0)
+
+
+def test_report_and_csv_structure(engine):
+    result = run_campaign(SMALL, engine=engine, block_points=64)
+    text = result.csv_text()
+    assert text.splitlines()[0] == ",".join(FRONT_FIELDS)
+    assert len(text.splitlines()) == len(result.front) + 1
+    rep = result.report()
+    assert rep["spec"]["digest"] == SMALL.digest()
+    assert rep["stats"]["n_points"] == SMALL.n_points
+    assert rep["front_rows"] == len(result.front)
+
+
+# --- certification gate ------------------------------------------------------
+
+
+def test_certify_point_reproduces_bitwise(engine):
+    result = run_campaign(SMALL, engine=engine, block_points=64)
+    champion = min(result.front, key=lambda r: r["energy_pj"])
+    cert = certify_point(champion, engine=SweepEngine(mesh=None))
+    assert cert["bitwise_ok"], cert
+    assert cert["contracts_ok"] and cert["certified"]
+    assert cert["recomputed"]["energy_pj"] \
+        == champion["energy_pj"]          # exact float equality
+
+
+def test_certify_point_catches_tampered_rows(engine):
+    result = run_campaign(SMALL, engine=engine, block_points=64)
+    row = dict(min(result.front, key=lambda r: r["energy_pj"]))
+    row["energy_pj"] = row["energy_pj"] * 1.0000001
+    cert = certify_point(row, engine=SweepEngine(mesh=None))
+    assert not cert["bitwise_ok"]
+    assert not cert["certified"]
+
+
+def test_certify_front_champions(engine):
+    contracts = (Constraint("area_bytes", "<=", 1e7),)
+    result = run_campaign(SMALL, contracts, engine=engine,
+                          block_points=64)
+    cert = certify_front(result, objectives=("energy_pj", "time_ns"))
+    assert cert["ok"]
+    assert cert["groups_certified"] == 1
+    assert all(p["contracts_ok"] for p in cert["points"])
+    with pytest.raises(ValueError, match="certification objective"):
+        certify_front(result, objectives=("joules",))
+
+
+def test_certify_empty_filtered_subset_reports_not_zeros(engine):
+    """With a contract no GEMM can meet per-GEMM, the planner summary
+    over the contract-passing subset must surface summarize()'s
+    empty-input ValueError — not an all-zero aggregate."""
+    result = run_campaign(SMALL, engine=engine, block_points=64)
+    champion = min(result.front, key=lambda r: r["energy_pj"])
+    impossible = (Constraint("tops_per_w", ">=", 1e30),)
+    cert = certify_point(champion, impossible,
+                        engine=SweepEngine(mesh=None))
+    assert not cert["contracts_ok"]
+    pl = cert["planner"]
+    assert pl["contract_passing_gemms"] == 0
+    assert pl["filtered_summary"] is None
+    assert "at least one Decision" in pl["filtered_summary_error"]
+
+
+def test_summarize_raises_on_empty_decisions():
+    """Regression (ISSUE 9 satellite): summarize([]) used to return an
+    all-zero aggregate indistinguishable from a real no-CiM workload."""
+    with pytest.raises(ValueError, match="at least one Decision"):
+        summarize([])

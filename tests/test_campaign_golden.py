@@ -1,0 +1,114 @@
+"""Golden campaign-front fingerprint (ISSUE 9 satellite).
+
+tests/golden/campaign_front.csv pins the byte-exact frontier CSV of a
+fixed ~1k-point campaign grid — mistral-nemo-12b x {train_4k,
+decode_32k}, all four prototypes, all three cache levels, two
+primitive-budget scales, both order modes, grouped per GEMM (the mode
+whose groups span block boundaries, so the cross-chunk front merge is
+load-bearing).  Any cost-model, sweep-backend, or reduction change that
+moves a single front row fails here with a per-row diff — naming the
+group, the golden row and the new one — instead of shipping a quiet
+frontier drift.  Both batched backends are asserted against the same
+file, and the chunked variant additionally asserts that at least two
+engine chunks were exercised (the streaming acceptance criterion).
+
+Intentional frontier changes regenerate the file:
+
+    PYTHONPATH=src python tests/test_campaign_golden.py
+
+and the diff lands in review along with the change that caused it.
+"""
+import csv
+import os
+
+from repro.core.campaign import FRONT_FIELDS, CampaignSpec, run_campaign
+from repro.core.sweep import SweepEngine
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "campaign_front.csv")
+
+# 20 GEMMs x 48 units = 960 points
+SPEC = CampaignSpec(
+    workloads=(("mistral-nemo-12b", "train_4k"),
+               ("mistral-nemo-12b", "decode_32k")),
+    prototypes=("Analog-6T", "Analog-8T", "Digital-6T", "Digital-8T"),
+    levels=("RF", "SMEM-A", "SMEM-B"),
+    scales=(1.0, 4.0),
+    serialize_modes=(True,),
+    kn_thresholds=(4,),
+    order_modes=("exact", "greedy"),
+)
+N_POINTS = 960
+
+
+def _front_rows(backend: str = "vectorized",
+                engine: SweepEngine | None = None,
+                block_points: int = 256) -> tuple[list[dict], dict]:
+    """(formatted front rows, run stats) of the fixed golden grid."""
+    engine = engine or SweepEngine(mesh=None)
+    result = run_campaign(SPEC, engine=engine, backend=backend,
+                          block_points=block_points, group_by="gemm")
+    reader = csv.DictReader(result.csv_text().splitlines())
+    return list(reader), result.stats
+
+
+def _assert_matches_golden(backend: str,
+                           engine: SweepEngine | None = None) -> None:
+    with open(GOLDEN) as f:
+        golden = list(csv.DictReader(f))
+    got, stats = _front_rows(backend, engine)
+    assert stats["n_points"] == N_POINTS, (
+        f"golden grid enumerates {stats['n_points']} points, expected "
+        f"{N_POINTS} — the spec or workload set changed; regenerate "
+        f"the golden file (see module docstring)")
+    assert len(golden) == len(got), (
+        f"{backend} front has {len(got)} rows, golden has "
+        f"{len(golden)} — regenerate tests/golden/campaign_front.csv "
+        f"if intentional (see module docstring)")
+    diffs = []
+    for i, (want, have) in enumerate(zip(golden, got)):
+        delta = [f"{k}: golden={want[k]!r} got={have[k]!r}"
+                 for k in FRONT_FIELDS if want[k] != have[k]]
+        if delta:
+            diffs.append(f"  row {i} [{want['group']}/{want['label']}/"
+                         f"{want['config']}]: " + "; ".join(delta))
+    assert not diffs, (
+        f"{backend} backend drifted from the golden campaign front on "
+        f"{len(diffs)}/{len(golden)} rows:\n" + "\n".join(diffs[:25])
+        + ("\n  ..." if len(diffs) > 25 else "")
+        + "\nIf the drift is intentional, regenerate tests/golden/"
+          "campaign_front.csv (see module docstring).")
+
+
+def test_golden_front_vectorized():
+    _assert_matches_golden("vectorized")
+
+
+def test_golden_front_pallas():
+    """Backend-parity gate: the Pallas sweep kernel reproduces the
+    committed frontier byte for byte."""
+    _assert_matches_golden("pallas")
+
+
+def test_golden_front_chunked_engine():
+    """The same frontier must come out of a chunk-streaming engine —
+    and the grid must actually stream: >= 2 device chunks evaluated
+    (the ISSUE 9 streaming acceptance criterion) with peak batch size
+    bounded by chunk_rows."""
+    engine = SweepEngine(mesh=None, chunk_rows=512)
+    _assert_matches_golden("vectorized", engine)
+    chunks = engine.cache_info()["chunks"]
+    assert chunks["chunk_rows"] == 512
+    assert chunks["evaluated"] >= 2, chunks
+    assert chunks["rows"] + chunks["padded_rows"] \
+        <= chunks["evaluated"] * 512
+
+
+if __name__ == "__main__":
+    engine = SweepEngine(mesh=None)
+    result = run_campaign(SPEC, engine=engine, backend="vectorized",
+                          block_points=256, group_by="gemm")
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    sha = result.write_csv(GOLDEN)
+    print(f"wrote {len(result.front)} front rows to {GOLDEN} "
+          f"(sha256 {sha[:16]})")
