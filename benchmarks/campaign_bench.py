@@ -1,9 +1,10 @@
 """Design-space campaign benchmark: streaming frontier determinism gates.
 
 Runs a fixed mid-size campaign grid (mistral-nemo-12b x {train_4k,
-decode_32k} x 4 prototypes x 3 levels x 2 scales x 2 order modes,
-960 points, grouped per GEMM so cross-chunk front merging is
-load-bearing) and gates the properties the frontier artifacts rest on:
+decode_32k} x 4 prototypes x 3 precisions (INT8/INT4/FP8) x 3 levels x
+2 scales x 2 order modes, 2880 points, grouped per GEMM so cross-chunk
+front merging is load-bearing) and gates the properties the frontier
+artifacts rest on:
 
   * determinism — two back-to-back runs on fresh engines must produce
     **byte-identical** frontier CSVs (the golden front test and the
@@ -53,6 +54,7 @@ SPEC = CampaignSpec(
     workloads=(("mistral-nemo-12b", "train_4k"),
                ("mistral-nemo-12b", "decode_32k")),
     prototypes=("Analog-6T", "Analog-8T", "Digital-6T", "Digital-8T"),
+    precisions=("int8", "int4", "fp8"),
     levels=("RF", "SMEM-A", "SMEM-B"),
     scales=(1.0, 4.0),
     order_modes=("exact", "greedy"),

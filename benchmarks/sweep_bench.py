@@ -35,7 +35,12 @@ parity.  The headline numbers:
                     interpret mode (CI) the timing is recorded for the
                     trajectory but slower-than-XLA is expected and not an
                     error.  Platforms without any Pallas lowering record
-                    the fallback reason instead.
+                    the fallback reason instead,
+  * precision     — the full workload re-planned at INT4 and FP8 (the
+                    widened What axis), vectorized timing plus a
+                    pallas-vs-vectorized verdict-parity gate per
+                    precision; recorded under the `precision` block
+                    (campaign_bench's whole-file merge preserves it).
 
 The cold measurement explicitly drops the compiled kernels first
 (`sweep.jit_cache_clear` — every jitted variant, greedy and sharded
@@ -77,7 +82,7 @@ from repro.core.planner import plan_workload, standard_configs
 from repro.core.sweep import (SweepEngine, cache_clear, cache_info,
                               jit_cache_clear, plan_workload_batched)
 from repro.core.vectorized import (MAP_FIELDS, config_row, enumerate_space,
-                                   evaluate_flat)
+                                   evaluate_flat, precision_row)
 from repro.kernels.sweep_eval import pallas_status, sweep_eval
 from repro.launch.mesh import row_mesh
 
@@ -132,7 +137,7 @@ def _large_flat_batch(n_rows: int = LARGE_BATCH_ROWS):
     b = int(np.asarray(space["k_arr"]).shape[0])
     batch = {f: np.asarray(space[f], np.float32) for f in MAP_FIELDS}
     for name, v in {"M": g.M, "N": g.N, "K": g.K,
-                    **config_row(cfg)}.items():
+                    **precision_row(g), **config_row(cfg)}.items():
         batch[name] = np.full((b,), float(v), np.float32)
     return batch, b
 
@@ -268,6 +273,31 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
             {"backend": f"pallas_large_batch_{big_rows}rows",
              "seconds": round(pallas_large_s, 4)}]
 
+    # --- precision axis: the full workload re-planned at every non-default
+    # precision of the widened What axis (INT4 packed weights, FP8
+    # scaled), timed through the vectorized backend and parity-gated
+    # against the pallas kernel — the same dual-backend gate the INT8
+    # grid gets, so a precision-factor regression in either kernel is a
+    # red bench, not a quiet drift
+    precision_block = {}
+    precision_parity_ok = True
+    for tok, (p_bits, p_fp) in (("int4", (4, False)), ("fp8", (8, True))):
+        pgemms = [g.scaled(bits=p_bits, fp=p_fp) for g in gemms]
+        prec_s, prec_plan = _best_of(
+            repeats, lambda: plan_workload(pgemms, backend="vectorized"),
+            setup=cache_clear)
+        prec_pallas = plan_workload(pgemms, backend="pallas")
+        prec_mismatches = sum(
+            a.use_cim != b.use_cim or a.best_energy != b.best_energy
+            for a, b in zip(prec_plan, prec_pallas))
+        precision_parity_ok &= prec_mismatches == 0
+        precision_block[tok] = {
+            "seconds": round(prec_s, 3),
+            "pallas_verdict_mismatches": prec_mismatches,
+            "cim_fraction": round(
+                sum(d.use_cim for d in prec_plan) / len(prec_plan), 3),
+        }
+
     sanity_ok = cold_s > batched_s > cached_s
     if not sanity_ok:
         print(f"WARNING: planner_sweep_speed ordering violated "
@@ -314,6 +344,7 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
             "large_batch": large_batch_block,
             "sanity_ok": pallas_sanity_ok,
         },
+        "precision": precision_block,
         "sanity_ok": sanity_ok,
         "cache": cache_after_cached,
         "provenance": _provenance(),
@@ -348,6 +379,7 @@ def planner_sweep_speed(write_json: bool = True, repeats: int = 3):
                 or derived["greedy_verdict_mismatches"]
                 or pallas_mismatches
                 or not pallas_sanity_ok
+                or not precision_parity_ok
                 or not sharded_parity_ok or not streamed_parity_ok
                 or not sanity_ok):
             # quarantine: callers like benchmarks/run.py don't see the
@@ -372,6 +404,12 @@ if __name__ == "__main__":
     if derived["pallas"]["verdict_mismatches"]:
         sys.exit(f"pallas parity regression: pallas != vectorized on "
                  f"{derived['pallas']['verdict_mismatches']} GEMMs")
+    prec_bad = {tok: blk["pallas_verdict_mismatches"]
+                for tok, blk in derived["precision"].items()
+                if blk["pallas_verdict_mismatches"]}
+    if prec_bad:
+        sys.exit(f"precision-axis parity regression: pallas != vectorized "
+                 f"at {prec_bad}")
     if not derived["pallas"]["sanity_ok"]:
         sys.exit("pallas large-batch sanity violated: the compiled fused "
                  "kernel is slower than XLA fusion (see WARNING above)")

@@ -31,10 +31,13 @@ sweep engine into that map at scale:
     and the contracts still hold — the deployment gate for a design
     picked off a frontier CSV.
 
-Precision is an enumerable axis (`precisions`, flowing into
-`GEMM.bits`), but the cost model is calibrated at INT8 — until the
-ROADMAP's INT4/FP8 cost-model axis lands, non-8-bit points score under
-the INT8-calibrated equations and are mainly useful as grid plumbing.
+Precision is a first-class What axis: `precisions` accepts the tokens
+4 / 8 / "fp8" (normalized by `parse_precision` to canonical
+"int4"/"int8"/"fp8"), flowing into `GEMM.bits`/`GEMM.fp` and from
+there into the per-precision CiM cost factors
+(`primitives.precision_factors`: analog ADC/DAC scaling + column
+parallelism, digital bit-serial latency).  INT8 remains the Table-IV
+calibration identity.
 
 `launch.campaign` is the CLI; tests/test_campaign_golden.py pins a
 ~1k-point grid's frontier CSV for both batched backends, and
@@ -55,7 +58,7 @@ from .loopnest import check_order_mode
 from .memory import RF, CiMSystemConfig, configb_count, \
     iso_area_primitive_count
 from .pareto import ParetoAccumulator, pareto_mask_np
-from .primitives import PRIMITIVES
+from .primitives import PRIMITIVES, SUPPORTED_BITS
 from .sweep import SweepEngine, plan_workload_batched
 
 # The campaign's objective triple, all minimized.
@@ -78,6 +81,28 @@ FRONT_FIELDS = ("group", "index", "label", "M", "N", "K", "precision",
                 "kn_threshold", "order_mode", "config", "n_prims",
                 "n_gemms", "energy_pj", "time_ns", "area_bytes",
                 "gflops", "tops_per_w")
+
+
+def parse_precision(token) -> tuple[int, bool, str]:
+    """Normalize one precision-axis token to (bits, fp, canonical name).
+
+    Accepts ints (4, 8) and strings ("4", "8", "int4", "int8", "fp8");
+    the canonical names ("int4" / "int8" / "fp8") are what front CSVs
+    carry in their `precision` column."""
+    t = str(token).strip().lower()
+    if t in ("fp8", "float8", "f8"):
+        return 8, True, "fp8"
+    if t.startswith("int"):
+        t = t[3:]
+    try:
+        bits = int(t)
+    except ValueError:
+        raise ValueError(f"unknown precision token {token!r}: expected "
+                         f"one of {SUPPORTED_BITS} or 'fp8'") from None
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported integer precision INT{bits} "
+                         f"(supported: {SUPPORTED_BITS}, plus 'fp8')")
+    return bits, False, f"int{bits}"
 
 
 def area_proxy_bytes(cfg: CiMSystemConfig) -> float:
@@ -175,9 +200,13 @@ class Constraint:
 
 
 class CampaignUnit(NamedTuple):
-    """One design-axis combination (everything but the workload GEMM)."""
+    """One design-axis combination (everything but the workload GEMM).
+
+    `precision` is the canonical token ("int4"/"int8"/"fp8");
+    `bits`/`fp` are the parsed element-format pair applied to the
+    workload GEMMs."""
     unit_index: int
-    precision: int
+    precision: str
     prototype: str
     level: str
     scale: float
@@ -187,6 +216,8 @@ class CampaignUnit(NamedTuple):
     config: str                  # label
     cfg: CiMSystemConfig
     area_bytes: float
+    bits: int = 8
+    fp: bool = False
 
 
 class CampaignPoint(NamedTuple):
@@ -216,7 +247,8 @@ class CampaignSpec:
     serialize_modes: tuple[bool, ...] = (True,)
     kn_thresholds: tuple[int, ...] = (4,)
     order_modes: tuple[str, ...] = ("exact",)
-    precisions: tuple[int, ...] = (8,)
+    # precision-axis tokens: 4 / 8 / "fp8" (see parse_precision)
+    precisions: tuple = (8,)
 
     def __post_init__(self):
         if not self.workloads:
@@ -231,8 +263,7 @@ class CampaignSpec:
         for om in self.order_modes:
             check_order_mode(om)
         for p in self.precisions:
-            if int(p) < 1:
-                raise ValueError(f"precision bits must be >= 1, got {p}")
+            parse_precision(p)       # raises on unknown tokens
         # axis validation via build_config (raises on bad values)
         for proto in self.prototypes:
             for level in self.levels:
@@ -249,7 +280,8 @@ class CampaignSpec:
         grid free of duplicate points (duplicates are exact objective
         ties and would all land on the front together)."""
         out: list[CampaignUnit] = []
-        for bits in self.precisions:
+        for prec in self.precisions:
+            bits, fp, tok = parse_precision(prec)
             for proto in self.prototypes:
                 for level in self.levels:
                     for scale in self.scales:
@@ -261,12 +293,13 @@ class CampaignSpec:
                                                    ser, kn)
                                 for om in self.order_modes:
                                     out.append(CampaignUnit(
-                                        len(out), int(bits), proto,
+                                        len(out), tok, proto,
                                         level, float(scale), bool(ser),
                                         int(kn), om,
                                         config_label(proto, level,
                                                      scale, ser, kn),
-                                        cfg, area_proxy_bytes(cfg)))
+                                        cfg, area_proxy_bytes(cfg),
+                                        bits, fp))
         return out
 
     def workload_gemms(self) -> list[tuple[str, list[GEMM]]]:
@@ -299,8 +332,8 @@ class CampaignSpec:
         for wi, (group, gemms) in enumerate(self.workload_gemms()):
             for gi, g in enumerate(gemms):
                 for u in units:
-                    gemm = g if g.bits == u.precision \
-                        else g.scaled(bits=u.precision)
+                    gemm = g if (g.bits == u.bits and g.fp == u.fp) \
+                        else g.scaled(bits=u.bits, fp=u.fp)
                     yield CampaignPoint(index, group, (wi, gi), gemm, u)
                     index += 1
 
@@ -598,12 +631,13 @@ def _row_gemms(row: dict, spec: CampaignSpec) -> list[GEMM]:
     """The GEMMs behind one front row: the single GEMM of a gemm-mode
     row, or the whole workload cell of a workload-mode row."""
     arch, _, shape = row["group"].partition("/")
-    bits = int(row["precision"])
+    bits, fp, _ = parse_precision(row["precision"])
     if row["label"] != "" and row["M"] != "":
         return [GEMM(int(row["M"]), int(row["N"]), int(row["K"]),
-                     bits=bits, label=row["label"])]
+                     bits=bits, fp=fp, label=row["label"])]
     gemms = gemms_of_model(ARCHS[arch], SHAPES[shape])
-    return [g if g.bits == bits else g.scaled(bits=bits) for g in gemms]
+    return [g if (g.bits == bits and g.fp == fp)
+            else g.scaled(bits=bits, fp=fp) for g in gemms]
 
 
 def certify_point(row: dict,

@@ -26,6 +26,7 @@ from .loopnest import Loop, ceil_div, coverage_factor, revisit_factor
 from .mapping import PSUM_BYTES, CiMMapping, candidate_mappings
 from .memory import (DRAM, RF, SMEM, TEMPORAL_REDUCTION_PJ, CiMSystemConfig,
                      MemoryLevel)
+from .primitives import precision_factors
 
 DRAM_STREAM_EFFICIENCY = 0.5   # strided CiM weight/input tiles (DESIGN.md §7)
 
@@ -121,11 +122,17 @@ def _evaluate_cim_order(mp: CiMMapping, dram_loops: tuple[Loop, ...],
     waves = g.M * k_tiles * n_tiles            # array-activation groups
 
     # ---- compute time ------------------------------------------------------
+    # per-precision macro scaling vs the Table-IV INT8 calibration point
+    # (identity at INT8): energy_x on the MAC energy, latency_x on the
+    # activation latency, colpar_x on the usable column parallelism
+    energy_x, latency_x, colpar_x = precision_factors(
+        p.compute_type, g.bits, g.fp)
     row_steps = ceil_div(mp.k_arr, p.Rp)       # serial row groups (<= Rh)
-    col_steps = ceil_div(mp.n_arr, p.Cp)       # serial col groups (<= Ch)
+    col_steps = math.ceil(mp.n_arr / (p.Cp * colpar_x))  # serial col groups
     steps_per_activation = row_steps * col_steps
     serial_arrays = mp.n_arrays if (cfg.serialize_primitives and at_rf) else 1
-    compute_ns = waves * steps_per_activation * serial_arrays * p.latency_ns
+    compute_ns = (waves * steps_per_activation * serial_arrays
+                  * p.latency_ns * latency_x)
 
     # ---- traffic -----------------------------------------------------------
     # Loops above the buffer residency (innermost-first): DRAM-level loops.
@@ -186,7 +193,7 @@ def _evaluate_cim_order(mp: CiMMapping, dram_loops: tuple[Loop, ...],
 
     # ---- compute energy ----------------------------------------------------
     macs = g.macs
-    e["mac"] = macs * p.mac_energy_pj
+    e["mac"] = macs * p.mac_energy_pj * energy_x
     # temporal reductions: one add per output element per K-tile beyond the
     # in-array reduction (plus serial row groups within an activation).
     adds = g.output_elems * max(0, k_tiles * row_steps - 1)

@@ -20,9 +20,12 @@ class GEMM:
          or conv output pixels).
       N: columns of the weight/output matrix (e.g. output channels).
       K: reduction dimension.
-      bits: data precision in bits (paper fixes 8).
+      bits: data precision in bits (paper fixes 8; the widened What
+         axis also evaluates 4).
       label: human-readable provenance ("BERT-Large QK^T", ...).
       count: how many times this exact GEMM occurs in the workload.
+      fp: floating-point element format (FP8 when bits == 8); False is
+         the paper's integer precision.
     """
 
     M: int
@@ -31,10 +34,18 @@ class GEMM:
     bits: int = 8
     label: str = ""
     count: int = 1
+    fp: bool = False
 
     def __post_init__(self) -> None:
         if min(self.M, self.N, self.K) < 1:
             raise ValueError(f"GEMM dims must be >= 1, got {self}")
+        if self.fp and self.bits != 8:
+            raise ValueError(f"fp GEMMs must be 8-bit (FP8), got {self}")
+
+    @property
+    def precision(self) -> str:
+        """Canonical precision token: "int8" / "int4" / "fp8"."""
+        return "fp8" if self.fp else f"int{self.bits}"
 
     # --- basic quantities -------------------------------------------------
     @property

@@ -122,6 +122,26 @@ def gemms_of_model(cfg: ModelConfig, shape: ShapeConfig) -> list[GEMM]:
     return out
 
 
+def phase_gemms_of_model(cfg: ModelConfig, seq_len: int,
+                         batch: int) -> dict[str, list[GEMM]]:
+    """The serving phases of one model as separate GEMM sets.
+
+    {"prefill": gemms at M = seq_len (kind="prefill"),
+     "decode":  gemms at M = batch  (kind="decode")}
+
+    This is the input `planner.plan_workload_by_phase` expects: the same
+    architecture produces structurally different What/When verdicts per
+    phase (prefill's large-M reuse vs decode's M=batch GEMV pathology),
+    and the serving stack gates each phase by its own plan table."""
+    from ..configs.base import ShapeConfig
+    return {
+        "prefill": gemms_of_model(
+            cfg, ShapeConfig("phase-prefill", seq_len, batch, "prefill")),
+        "decode": gemms_of_model(
+            cfg, ShapeConfig("phase-decode", seq_len, batch, "decode")),
+    }
+
+
 # GEMMs whose labels match these markers multiply two *activations*
 # (attention scores / probability-weighted values): there is no stationary
 # weight to quantize, so the runtime projection gate never sees them.

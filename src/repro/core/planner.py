@@ -169,6 +169,42 @@ def plan_workload(gemms: Iterable[GEMM],
             for g in gemms]
 
 
+def plan_workload_by_phase(phase_gemms: dict,
+                           configs: dict[str, CiMSystemConfig] | None = None,
+                           order_mode: str = "exact",
+                           backend: str = "vectorized"
+                           ) -> dict[str, list[Decision]]:
+    """Per-phase what/when/where plans: {"prefill": [...], "decode": [...]}.
+
+    The paper's When answer is phase-dependent — prefill GEMMs carry
+    M = seq_len reuse while decode GEMMs collapse to M = batch — so a
+    single plan over a mixed workload mis-gates one phase or the other.
+    Each phase is planned independently over its own GEMM set (one
+    batched sweep per phase, shared result cache across phases for
+    shapes that coincide).
+
+    Raises ValueError on a phase with zero GEMMs: an empty phase plan
+    would silently gate *nothing* for that phase (every lookup would
+    KeyError at trace time at best, or — with a permissive table — run
+    ungated), which is indistinguishable from a deliberate all-baseline
+    verdict.  Callers that legitimately have no GEMMs for a phase must
+    omit the phase, not pass an empty list."""
+    _check_args(backend, order_mode)
+    if not phase_gemms:
+        raise ValueError("plan_workload_by_phase() needs at least one phase")
+    plans: dict[str, list[Decision]] = {}
+    for phase, gemms in phase_gemms.items():
+        gemms = list(gemms)
+        if not gemms:
+            raise ValueError(
+                f"phase {phase!r} has zero eligible GEMMs — an empty "
+                "phase plan would silently disable gating for that phase; "
+                "omit the phase instead of passing an empty workload")
+        plans[phase] = plan_workload(gemms, configs, order_mode,
+                                     backend=backend)
+    return plans
+
+
 def summarize(decisions: Sequence[Decision]) -> dict:
     """Aggregate what/when/where statistics over a workload.
 

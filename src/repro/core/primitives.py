@@ -41,6 +41,57 @@ def compute_latency_ns(cim_freq_ghz: float, cycles_mac: float) -> float:
     return (1.0 / cim_freq_ghz) * cycles_mac
 
 
+# --- per-precision macro scaling (What-axis widening) ----------------------
+# Multiplicative factors on the Table-IV 8b-8b calibration point, following
+# the analog/digital SRAM-CiM characterizations (SRAM-CiM review, CiMLoop):
+#
+#   * analog INT-b: MAC energy splits into an array part that scales
+#     linearly with the bit-serial input width (0.4·b/8) and an ADC part
+#     that scales with resolution (0.6·2^(b-8)); activation latency is
+#     dominated by input DAC streaming (0.5 + 0.5·b/8); halving the
+#     weight width doubles usable column parallelism (colpar 8/b — two
+#     INT4 weights share one 8b column's ADC range).
+#   * analog FP8: shared-exponent handling costs an extra alignment pass
+#     (energy x1.3, latency x1.5) and halves column parallelism (0.5).
+#   * digital INT-b: bit-serial multiply — energy (b/8)^2, latency b/8,
+#     no column-parallelism change.
+#   * digital FP8: exponent-align adder overhead (energy x1.2, latency
+#     x1.25), full column parallelism.
+#
+# All four branches are exactly (1, 1, 1) at INT8 so the Table-IV
+# calibration (tests/test_calibration.py) is untouched.
+
+ANALOG_FP8_FACTORS = (1.3, 1.5, 0.5)
+DIGITAL_FP8_FACTORS = (1.2, 1.25, 1.0)
+SUPPORTED_BITS = (4, 8)
+
+
+def precision_factors(compute_type: str, bits: int,
+                      fp: bool = False) -> tuple[float, float, float]:
+    """(energy_x, latency_x, colpar_x) vs the INT8 calibration point.
+
+    energy_x scales the per-MAC energy, latency_x the per-step array
+    activation latency, and colpar_x the usable column parallelism
+    (Cp_eff = Cp * colpar_x).  Identity at INT8 by construction.
+    """
+    if compute_type not in ("analog", "digital"):
+        raise ValueError(f"unknown compute_type {compute_type!r}")
+    if fp:
+        if bits != 8:
+            raise ValueError(f"FP precision requires 8 bits, got {bits}")
+        return (ANALOG_FP8_FACTORS if compute_type == "analog"
+                else DIGITAL_FP8_FACTORS)
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported integer precision INT{bits} "
+                         f"(supported: {SUPPORTED_BITS})")
+    if bits == 8:
+        return (1.0, 1.0, 1.0)
+    r = bits / 8.0
+    if compute_type == "analog":
+        return (0.4 * r + 0.6 * 2.0 ** (bits - 8), 0.5 + 0.5 * r, 8.0 / bits)
+    return (r * r, r, 1.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class CiMPrimitive:
     """One CiM array (paper Table IV row)."""

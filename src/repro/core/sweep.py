@@ -81,7 +81,7 @@ from .mapping import candidate_mappings
 from .memory import CiMSystemConfig
 from .vectorized import (BASE_TILE_FIELDS, MAP_FIELDS, config_row,
                          enumerate_baseline_space, evaluate_baseline_flat,
-                         evaluate_flat)
+                         evaluate_flat, precision_row)
 
 _OUT_KEYS = ("energy_pj", "time_ns", "compute_ns", "dram_ns", "smem_ns",
              "utilization", "dram_bytes", "smem_bytes", "valid")
@@ -157,7 +157,7 @@ def _auto_mesh():
 
 
 def _gemm_key(g: GEMM):
-    return (g.M, g.N, g.K, g.bits)
+    return (g.M, g.N, g.K, g.bits, g.fp)
 
 
 def _cfg_key(cfg: CiMSystemConfig):
@@ -474,7 +474,8 @@ class SweepEngine:
                 for key, (g, c) in todo.items():
                     maps = candidate_mappings(g, c, order_mode)
                     live[key] = [maps, len(maps)]
-                    crow = {"M": g.M, "N": g.N, "K": g.K, **config_row(c)}
+                    crow = {"M": g.M, "N": g.N, "K": g.K,
+                            **precision_row(g), **config_row(c)}
                     cols = {f: np.full(len(maps), float(v), np.float32)
                             for f, v in crow.items()}
                     for f in MAP_FIELDS:

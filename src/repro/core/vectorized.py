@@ -47,13 +47,15 @@ from .primitives import TENSOR_CORE, TensorCoreSpec
 
 _ORDERS = list(itertools.permutations(["M", "K", "N"]))
 
-# Row layout of an evaluate_flat batch: GEMM dims + mapping + system config.
+# Row layout of an evaluate_flat batch: GEMM dims + precision + mapping +
+# system config.
 GEMM_FIELDS = ("M", "N", "K")
+PREC_FIELDS = ("bits", "is_fp")
 MAP_FIELDS = ("k_arr", "n_arr", "pk", "pn", "m1", "fk", "fn")
 CFG_FIELDS = ("n_prims", "at_rf", "serialize", "k_rows", "n_cols",
               "Rp", "Cp", "mac_units", "latency_ns", "mac_energy_pj",
-              "prim_capacity")
-FLAT_FIELDS = GEMM_FIELDS + MAP_FIELDS + CFG_FIELDS
+              "prim_capacity", "is_analog")
+FLAT_FIELDS = GEMM_FIELDS + PREC_FIELDS + MAP_FIELDS + CFG_FIELDS
 
 # Baseline batch layout: GEMM dims + RF tile + SMEM super-tile factors.
 BASE_TILE_FIELDS = ("mt", "nt", "kt", "ms", "ns", "ks")
@@ -71,7 +73,13 @@ def config_row(cfg: CiMSystemConfig) -> dict:
         "Rp": p.Rp, "Cp": p.Cp, "mac_units": p.mac_units,
         "latency_ns": p.latency_ns, "mac_energy_pj": p.mac_energy_pj,
         "prim_capacity": p.capacity_bytes,
+        "is_analog": int(p.compute_type == "analog"),
     }
+
+
+def precision_row(gemm: GEMM) -> dict:
+    """The PREC_FIELDS scalars describing one GEMM's element format."""
+    return {"bits": gemm.bits, "is_fp": int(gemm.fp)}
 
 
 def _accesses(n_bytes, level):
@@ -162,7 +170,27 @@ def cim_cast(batch: dict) -> dict:
     cols = {f: batch[f].astype(f32) for f in FLAT_FIELDS}
     cols["at_rf"] = batch["at_rf"].astype(bool)
     cols["serialize"] = batch["serialize"].astype(bool)
+    cols["is_fp"] = batch["is_fp"].astype(bool)
+    cols["is_analog"] = batch["is_analog"].astype(bool)
     return cols
+
+
+def cim_precision_factors(cols: dict):
+    """Batched counterpart of primitives.precision_factors: (energy_x,
+    latency_x, colpar_x) per row from the bits / is_fp / is_analog
+    columns.  Exactly (1, 1, 1) at INT8, so the Table-IV calibration
+    point is bitwise untouched on 8-bit integer rows."""
+    bits = cols["bits"]
+    is_fp, is_analog = cols["is_fp"], cols["is_analog"]
+    r = bits / 8.0
+    pow2 = jnp.exp2(bits - 8.0)
+    energy_int = jnp.where(is_analog, 0.4 * r + 0.6 * pow2, r * r)
+    latency_int = jnp.where(is_analog, 0.5 + 0.5 * r, r)
+    colpar_int = jnp.where(is_analog, 8.0 / bits, 1.0)
+    energy_x = jnp.where(is_fp, jnp.where(is_analog, 1.3, 1.2), energy_int)
+    latency_x = jnp.where(is_fp, jnp.where(is_analog, 1.5, 1.25), latency_int)
+    colpar_x = jnp.where(is_fp, jnp.where(is_analog, 0.5, 1.0), colpar_int)
+    return energy_x, latency_x, colpar_x
 
 
 def cim_row_terms(cols: dict) -> dict:
@@ -209,10 +237,15 @@ def cim_row_terms(cols: dict) -> dict:
              & (~at_rf | fits_buffer))   # buffer check only applies at RF
 
     # --- compute time (primitives share the input driver only at RF) ---
+    # per-precision macro scaling (identity at INT8): latency_x stretches
+    # each activation step, colpar_x rescales the usable column
+    # parallelism, energy_x scales the per-MAC energy below
+    energy_x, latency_x, colpar_x = cim_precision_factors(cols)
     row_steps = jnp.ceil(k_arr / Rp)
-    col_steps = jnp.ceil(n_arr / Cp)
+    col_steps = jnp.ceil(n_arr / (Cp * colpar_x))
     serial = jnp.where(serialize & at_rf, pk * pn, 1.0)
-    compute_ns = waves * row_steps * col_steps * serial * latency_ns
+    compute_ns = (waves * row_steps * col_steps * serial
+                  * latency_ns * latency_x)
 
     # --- level-local traffic + compute energy ---
     # energy is charged in whole accesses per tensor stream, exactly like
@@ -224,7 +257,7 @@ def cim_row_terms(cols: dict) -> dict:
     smem_bytes = a_smem_reads + z_smem_rmw
     e_smem = (_accesses(a_smem_reads, SMEM) + _accesses(z_smem_rmw, SMEM)
               ) * SMEM.access_energy_pj
-    e_mac = macs * mac_energy_pj
+    e_mac = macs * mac_energy_pj * energy_x
     adds = output_elems * jnp.maximum(0.0, k_tiles * row_steps - 1)
     e_red = adds * TEMPORAL_REDUCTION_PJ
 
@@ -369,7 +402,8 @@ def evaluate_batch(gemm: GEMM, cfg: CiMSystemConfig, mappings: dict,
     """
     b = mappings["k_arr"].shape[0]
     batch = {f: jnp.asarray(mappings[f]) for f in MAP_FIELDS}
-    consts = {"M": gemm.M, "N": gemm.N, "K": gemm.K, **config_row(cfg)}
+    consts = {"M": gemm.M, "N": gemm.N, "K": gemm.K,
+              **precision_row(gemm), **config_row(cfg)}
     for name, v in consts.items():
         batch[name] = jnp.full((b,), float(v), jnp.float32)
     return evaluate_flat(batch, dram_eff)

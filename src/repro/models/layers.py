@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from ..quant.int8 import dequant_contract, planned_linear
+from ..quant.lowbit import (dequant_contract_fp8, dequant_contract_int4,
+                            planned_linear_fp8, planned_linear_int4)
 
 
 def dtype_of(name: str):
@@ -38,6 +40,10 @@ _ROUTE_TRACE = threading.local()    # .records, per-thread: concurrent
 # route strings linear() records (serving/dryrun/bench key off these)
 CIM_ROUTE = "cim-int8-pallas"
 DEQUANT_ROUTE = "int8-dequant-xla"
+CIM_INT4_ROUTE = "cim-int4-pallas"
+DEQUANT_INT4_ROUTE = "int4-dequant-xla"
+CIM_FP8_ROUTE = "cim-fp8-pallas"
+DEQUANT_FP8_ROUTE = "fp8-dequant-xla"
 FLOAT_ROUTE = "xla"
 
 
@@ -92,6 +98,20 @@ def linear(w, x, label: str, plan=None, spec: str | None = None):
     quantized = isinstance(w, dict)
     use_cim = bool(plan is not None and quantized and plan.use_cim(label))
     if quantized:
+        # the present key is the jit-static format discriminator
+        # (quant.lowbit): "q" int8 / "q4" packed int4 / "qf8" scaled fp8
+        if "q4" in w:
+            if use_cim and spec is None and w["q4"].ndim == 2:
+                _record_route(label, CIM_INT4_ROUTE)
+                return planned_linear_int4(x, w["q4"], w["scale"])
+            _record_route(label, DEQUANT_INT4_ROUTE)
+            return dequant_contract_int4(x, w["q4"], w["scale"], spec)
+        if "qf8" in w:
+            if use_cim and spec is None and w["qf8"].ndim == 2:
+                _record_route(label, CIM_FP8_ROUTE)
+                return planned_linear_fp8(x, w["qf8"], w["scale"])
+            _record_route(label, DEQUANT_FP8_ROUTE)
+            return dequant_contract_fp8(x, w["qf8"], w["scale"], spec)
         if use_cim and spec is None and w["q"].ndim == 2:
             _record_route(label, CIM_ROUTE)
             return planned_linear(x, w["q"], w["scale"], use_cim_path=True)

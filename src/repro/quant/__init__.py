@@ -1,11 +1,21 @@
-"""INT8 quantization (paper's evaluation precision) + planner-gated linear
-+ the jit-static KernelPlanTable routing verdicts into the model stack."""
+"""Quantized weight formats (INT8 / packed INT4 / scaled FP8), the
+planner-gated linear routes, and the jit-static KernelPlanTable carrying
+What/When/Where verdicts into the model stack."""
 from .int8 import (PROJECTION_WEIGHT_NAMES, dequantize_weight,
                    planned_linear, quantization_error, quantize_model_params,
                    quantize_tree, quantize_weight)
+from .lowbit import (dequant_contract_fp8, dequant_contract_int4,
+                     dequantize_weight_fp8, dequantize_weight_int4,
+                     pack_int4, quantize_model_params_lowbit,
+                     quantize_weight_fp8, quantize_weight_int4, unpack_int4,
+                     weight_format)
 from .plan_table import KernelPlanTable, PlanEntry, strip_model_prefix
 
 __all__ = ["quantize_weight", "dequantize_weight", "quantize_tree",
            "quantize_model_params", "planned_linear", "quantization_error",
            "PROJECTION_WEIGHT_NAMES", "KernelPlanTable", "PlanEntry",
-           "strip_model_prefix"]
+           "strip_model_prefix",
+           "quantize_weight_int4", "dequantize_weight_int4", "pack_int4",
+           "unpack_int4", "quantize_weight_fp8", "dequantize_weight_fp8",
+           "dequant_contract_int4", "dequant_contract_fp8",
+           "quantize_model_params_lowbit", "weight_format"]

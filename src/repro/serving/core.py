@@ -42,7 +42,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig, RunConfig
 from ..models import decode_step
 from ..models.layers import route_trace
-from ..quant import (KernelPlanTable, quantize_model_params,
+from ..quant import (KernelPlanTable, quantize_model_params_lowbit,
                      strip_model_prefix)
 
 
@@ -84,6 +84,11 @@ class DecodeCore:
     params: Any
     quantize: bool = False
     gated: bool = True
+    # weight precision of the quantized execution path (the What axis at
+    # runtime): "int8" (default), "int4" (packed nibbles) or "fp8"
+    # (e4m3 scaled) — models.layers.linear dispatches each format to its
+    # own CiM-Pallas / dequant-XLA route pair
+    precision: str = "int8"
     # decode shape the planner reasons about (batch is what matters for
     # the paper's M=1 pathology; ServeSession passes its own)
     plan_batch: int = 8
@@ -105,19 +110,40 @@ class DecodeCore:
             raise ValueError(f"max_plan_variants must be >= 1, "
                              f"got {self.max_plan_variants}")
         self._kernel_plan = None
+        self._kernel_plans = None
         self._plan_cache_telemetry = None
         self._plan_lock = threading.Lock()
         self._verdict_table = None
+        self._phase_verdict_tables = None
         self._batch_steps: OrderedDict = OrderedDict()
         self._exec_lock = threading.Lock()
         self.plan_evictions = 0
         self.plan_table = None
+        self.prefill_plan_table = None
         if self.quantize:
-            # plan BEFORE jit: the verdicts are static inputs of the one
-            # lowered decode program, not runtime state
-            table = self.verdict_table
+            # plan BEFORE jit: the verdicts are static inputs of the
+            # lowered decode/prefill programs, not runtime state.  Each
+            # serving phase gets its *own* table (planner
+            # plan_workload_by_phase): prefill GEMMs carry M = seq_len
+            # reuse, decode GEMMs collapse to M = batch, so their
+            # What/When verdicts legitimately differ.
+            tables = self.phase_verdict_tables
+            table, ptable = tables["decode"], tables["prefill"]
             self.plan_table = table if self.gated else table.ungated()
-            self.params = quantize_model_params(self.params)
+            pgate = ptable if self.gated else ptable.ungated()
+            # when the phases gate every *projection* identically, the
+            # lowered programs would be identical — alias the execution
+            # table so the phases share ONE compiled step.  Activation
+            # GEMMs (QK^T / pV scores) have no stationary weight and
+            # never consult the table, so their phase-specific labels
+            # must not force a redundant second program.
+            from ..core.llm_workloads import is_projection_label
+            proj_flips = [lab for lab in self.plan_table.flips(pgate)
+                          if is_projection_label(lab)]
+            self.prefill_plan_table = (pgate if proj_flips
+                                       else self.plan_table)
+            self.params = quantize_model_params_lowbit(self.params,
+                                                       self.precision)
         if self.donate is None:
             self.donate = jax.default_backend() != "cpu"
         cfg, rc, plan = self.cfg, self.rc, self.plan_table
@@ -131,6 +157,20 @@ class DecodeCore:
             lambda params, cache, tokens, pos:
             decode_step(params, cache, tokens, pos, cfg, rc, plan=plan),
             donate_argnums=(1,) if self.donate else ())
+        # the prefill-phase step: same per-token decode fn closed over
+        # the prefill table.  When the phases agree (or the core is
+        # unquantized/ungated: both plans identical) the decode program
+        # is shared — one executable per *distinct* phase plan, never a
+        # retrace.
+        pplan = self.prefill_plan_table
+        if pplan == plan:
+            self._prefill_step = self._step
+        else:
+            self._prefill_step = jax.jit(
+                lambda params, cache, tokens, pos:
+                decode_step(params, cache, tokens, pos, cfg, rc,
+                            plan=pplan),
+                donate_argnums=(1,) if self.donate else ())
 
     # --- planner plumbing (the session-level API, now core-owned) ------
 
@@ -151,18 +191,20 @@ class DecodeCore:
         return self._kernel_plan
 
     def _build_kernel_plan(self) -> None:
-        from ..configs.base import ShapeConfig
-        from ..core.llm_workloads import gemms_of_model
-        from ..core.planner import plan_workload
+        from ..core.llm_workloads import phase_gemms_of_model
+        from ..core.planner import plan_workload_by_phase
         from ..core.sweep import measured_cache_delta
-        # the planner reasons about decode-shaped GEMMs; seq_len enters
-        # the taxonomy only through the shape tag, batch is what matters
-        shape = ShapeConfig("serve", self.plan_max_len, self.plan_batch,
-                            "decode")
-        gemms = gemms_of_model(self.cfg, shape)
-        decisions, self._plan_cache_telemetry = measured_cache_delta(
-            lambda: plan_workload(gemms, backend="vectorized"))
-        self._kernel_plan = {d.gemm.label: d for d in decisions}
+        # plan BOTH serving phases: decode GEMMs at M = plan_batch (the
+        # paper's M=1 pathology, batched) and prefill GEMMs at
+        # M = plan_max_len.  One batched sweep per phase; the sweep
+        # engine's LRU makes repeat cores over the same shapes free.
+        phases = phase_gemms_of_model(self.cfg, self.plan_max_len,
+                                      self.plan_batch)
+        by_phase, self._plan_cache_telemetry = measured_cache_delta(
+            lambda: plan_workload_by_phase(phases, backend="vectorized"))
+        self._kernel_plans = {ph: {d.gemm.label: d for d in ds}
+                              for ph, ds in by_phase.items()}
+        self._kernel_plan = self._kernel_plans["decode"]
 
     @property
     def plan_cache_telemetry(self) -> dict:
@@ -176,13 +218,31 @@ class DecodeCore:
         return self._plan_cache_telemetry
 
     @property
+    def kernel_plans(self) -> dict:
+        """phase -> {label -> Decision} for both serving phases
+        ("prefill" / "decode"); triggers the lazy per-phase plan build."""
+        _ = self.kernel_plan
+        return self._kernel_plans
+
+    @property
+    def phase_verdict_tables(self) -> dict[str, KernelPlanTable]:
+        """phase -> raw-verdict KernelPlanTable for both serving phases.
+        Never force-ungated; exists for non-quantized cores too (lazy
+        plan build)."""
+        if self._phase_verdict_tables is None:
+            self._phase_verdict_tables = {
+                ph: KernelPlanTable.from_decisions(
+                    plan.values(), model_name=self.cfg.name)
+                for ph, plan in self.kernel_plans.items()}
+        return self._phase_verdict_tables
+
+    @property
     def verdict_table(self) -> KernelPlanTable:
-        """The raw verdicts as a KernelPlanTable (short labels).  Unlike
-        `plan_table` it is never force-ungated, and it exists for
-        non-quantized cores too (lazy plan build)."""
+        """The decode-phase raw verdicts as a KernelPlanTable (short
+        labels).  Unlike `plan_table` it is never force-ungated, and it
+        exists for non-quantized cores too (lazy plan build)."""
         if self._verdict_table is None:
-            self._verdict_table = KernelPlanTable.from_decisions(
-                self.kernel_plan.values(), model_name=self.cfg.name)
+            self._verdict_table = self.phase_verdict_tables["decode"]
         return self._verdict_table
 
     def use_cim_for(self, label: str) -> bool:
@@ -200,6 +260,12 @@ class DecodeCore:
     def step(self, cache, tokens, pos):
         """Legacy fixed-batch decode step (uniform scalar position)."""
         return self._step(self.params, cache, tokens, pos)
+
+    def prefill_step(self, cache, tokens, pos):
+        """The prefill-phase per-token step: the same decode fn closed
+        over the *prefill* plan table (shared program when the phase
+        plans coincide)."""
+        return self._prefill_step(self.params, cache, tokens, pos)
 
     def batch_step_for(self, plan):
         """The continuous-batching executable for one (versioned) plan
@@ -258,6 +324,14 @@ class DecodeCore:
         exactly 1 after any traffic).  None if the private jax jit-cache
         probe is unavailable."""
         return self._executables(self._step)
+
+    @property
+    def prefill_executables(self) -> int | None:
+        """Programs compiled by the prefill-phase step (no-retrace gate:
+        exactly 1 after any traffic; when the phase plans coincide this
+        is the decode step's own count — one shared program).  None if
+        the private jax jit-cache probe is unavailable."""
+        return self._executables(self._prefill_step)
 
     @property
     def batch_decode_executables(self) -> int | None:

@@ -60,8 +60,9 @@ def make_prefill(cfg: ModelConfig, rc: RunConfig,
 
     Fills no cache inline (cache writes for prefill re-run the per-token
     decode path in `prefill_into_cache`); used for the prefill_32k shape
-    where only the forward matters for lowering.  Shares `plan` with the
-    decode step: one gate for both phases."""
+    where only the forward matters for lowering.  Pass the *prefill*
+    phase's plan table (DecodeCore.prefill_plan_table): each serving
+    phase is gated by its own What/When/Where verdicts."""
     def run(params, tokens, image_embeds=None):
         logits, _ = forward(params, tokens, cfg, rc,
                             image_embeds=image_embeds, plan=plan)
@@ -127,15 +128,20 @@ class ServeSession:
     n_image_tokens: int = 0
     quantize: bool = False
     gated: bool = True
+    # weight precision of the quantized path: "int8" / "int4" / "fp8"
+    precision: str = "int8"
 
     def __post_init__(self):
         self.core = DecodeCore(self.cfg, self.rc, self.params,
                                quantize=self.quantize, gated=self.gated,
+                               precision=self.precision,
                                plan_batch=self.batch,
                                plan_max_len=self.max_len)
         self.params = self.core.params       # quantized if quantize=True
         self.plan_table = self.core.plan_table
+        self.prefill_plan_table = self.core.prefill_plan_table
         self._step = self.core._step
+        self._prefill_step = self.core._prefill_step
         self.cache = init_cache(self.cfg, self.rc, self.batch,
                                 self.max_len,
                                 n_image_tokens=self.n_image_tokens)
@@ -185,6 +191,18 @@ class ServeSession:
         None when the private jax jit-cache probe is unavailable."""
         return self.core.decode_executables
 
+    @property
+    def prefill_executables(self) -> int | None:
+        """Programs compiled by the prefill-phase step — see
+        DecodeCore.prefill_executables."""
+        return self.core.prefill_executables
+
+    @property
+    def phase_verdict_tables(self) -> dict:
+        """phase -> raw-verdict KernelPlanTable — see
+        DecodeCore.phase_verdict_tables."""
+        return self.core.phase_verdict_tables
+
     # --- request state --------------------------------------------------
 
     def reset(self) -> None:
@@ -196,13 +214,15 @@ class ServeSession:
         self.pos = 0
 
     def prefill(self, tokens):
-        """Feed a prompt token-by-token through the decode path (keeps a
-        single lowered program; fine for small prompts in tests)."""
+        """Feed a prompt token-by-token through the *prefill-phase* step
+        — the same per-token program shape as decode, gated by the
+        prefill plan table (one lowered program per phase; they share a
+        program when the phase plans coincide)."""
         logits = None
         for t in range(tokens.shape[1]):
             tok = tokens[:, t:t + 1]
-            logits, self.cache = self._step(self.params, self.cache, tok,
-                                            jnp.int32(self.pos))
+            logits, self.cache = self._prefill_step(
+                self.params, self.cache, tok, jnp.int32(self.pos))
             self.pos += 1
         return logits
 

@@ -260,6 +260,17 @@ class ContinuousBatchingEngine:
         self.bucket_transitions = 0
         self.plan_swaps = 0
         self.swap_latencies_s: list[float] = []
+        # phase-split gating (frozen-plan engines only — an attached
+        # plan service owns the plan): a step whose live slots are ALL
+        # still prefilling runs under the prefill-phase table, any
+        # decoding slot makes it a decode-phase step.  Both variants
+        # come from the core's bounded executable cache, so steady
+        # mixed traffic serves from at most two compiled programs.
+        self._phase_tables = {"decode": core.plan_table,
+                              "prefill": core.prefill_plan_table}
+        self._phase = "decode"
+        self.phase_switches = 0
+        self.phase_steps = {"prefill": 0, "decode": 0}
 
     # --- admission ------------------------------------------------------
 
@@ -386,6 +397,23 @@ class ContinuousBatchingEngine:
         self._step_fn = fn
         self.plan_swaps += 1
 
+    def _select_phase_table(self) -> None:
+        """Per-step phase gating for frozen-plan engines: serve a
+        pure-prefill step (every live slot still feeding its prompt)
+        under the prefill-phase plan table, anything else under the
+        decode table.  A phase flip swaps the step pointer through the
+        core's bounded variant cache — each phase's program compiles at
+        most once, steady traffic never retraces."""
+        live = [s for s in self.slots if s is not None and not s.draining]
+        phase = ("prefill" if live and all(s.prefilling for s in live)
+                 else "decode")
+        if phase != self._phase:
+            self._phase = phase
+            self.phase_switches += 1
+            self._plan = self._phase_tables[phase]
+            self._step_fn = self.core.batch_step_for(self._plan)
+        self.phase_steps[phase] += 1
+
     @property
     def _pipelined(self) -> bool:
         return self.pipeline and not self._sync
@@ -430,6 +458,8 @@ class ContinuousBatchingEngine:
             return False
         if self.plan_service is not None:
             self._consult_plan_service()
+        elif self._phase_tables["prefill"] is not None:
+            self._select_phase_table()
         if self._step_fn is None:
             self._step_fn = self.core.batch_step_for(self._plan)
         prev = self._inflight
@@ -667,6 +697,12 @@ class ContinuousBatchingEngine:
                           "peak_in_use": self.allocator.peak_in_use},
             "decode_executables": self.decode_executables,
             "kv_donation_ok": self.donation_ok,
+            "phase_gating": {
+                "enabled": (self.plan_service is None
+                            and self._phase_tables["prefill"] is not None),
+                "phase_switches": self.phase_switches,
+                "phase_steps": dict(self.phase_steps),
+            },
             "decode_step_breakdown": self._step_breakdown(),
         }
         return {"requests": reqs, "aggregate": agg,

@@ -1,8 +1,9 @@
 """Golden campaign-front fingerprint (ISSUE 9 satellite).
 
 tests/golden/campaign_front.csv pins the byte-exact frontier CSV of a
-fixed ~1k-point campaign grid — mistral-nemo-12b x {train_4k,
-decode_32k}, all four prototypes, all three cache levels, two
+fixed ~3k-point campaign grid — mistral-nemo-12b x {train_4k,
+decode_32k}, all four prototypes, every supported precision
+(INT8/INT4/FP8 — the widened What axis), all three cache levels, two
 primitive-budget scales, both order modes, grouped per GEMM (the mode
 whose groups span block boundaries, so the cross-chunk front merge is
 load-bearing).  Any cost-model, sweep-backend, or reduction change that
@@ -27,18 +28,19 @@ from repro.core.sweep import SweepEngine
 GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                       "golden", "campaign_front.csv")
 
-# 20 GEMMs x 48 units = 960 points
+# 20 GEMMs x 144 units = 2880 points
 SPEC = CampaignSpec(
     workloads=(("mistral-nemo-12b", "train_4k"),
                ("mistral-nemo-12b", "decode_32k")),
     prototypes=("Analog-6T", "Analog-8T", "Digital-6T", "Digital-8T"),
+    precisions=("int8", "int4", "fp8"),
     levels=("RF", "SMEM-A", "SMEM-B"),
     scales=(1.0, 4.0),
     serialize_modes=(True,),
     kn_thresholds=(4,),
     order_modes=("exact", "greedy"),
 )
-N_POINTS = 960
+N_POINTS = 2880
 
 
 def _front_rows(backend: str = "vectorized",

@@ -1,0 +1,191 @@
+"""Phase-split gating: per-phase plan tables, one executable per phase,
+and the widened-precision (INT4/FP8) gated execution routes.
+
+The serving stack plans prefill and decode as separate workloads
+(planner.plan_workload_by_phase over llm_workloads.phase_gemms_of_model):
+prefill GEMMs carry M = seq_len reuse while decode GEMMs collapse to
+M = batch, so their What/When verdicts legitimately differ.  The
+contracts under test:
+
+  * a mixed-verdict architecture (mamba2's ssm-BCdt projection at
+    batch 8 / seq 2048) really produces different prefill and decode
+    verdict tables, and the core gates each phase by its own table;
+  * each phase compiles exactly ONE executable — and when the phases
+    gate every projection identically the execution tables are aliased,
+    so both phases share one program instead of lowering a redundant
+    second copy;
+  * an empty phase workload raises instead of silently disabling gating
+    (plan_workload_by_phase's zero-GEMM guard);
+  * the widened What axis at runtime: quantize=True sessions at
+    precision="int4" / "fp8" route gated projections through the
+    low-bit CiM Pallas paths and match the ungated program's logits —
+    routing is the only difference, same quantized weights.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, RunConfig, reduced
+from repro.core.llm_workloads import (is_projection_label,
+                                      phase_gemms_of_model)
+from repro.core.planner import plan_workload_by_phase
+from repro.models import init
+from repro.serving import ContinuousBatchingEngine, Request, ServeSession
+from repro.serving.core import DecodeCore
+
+RC = RunConfig(remat=False, attn_impl="naive")
+
+# the mixed-verdict serving shape: at plan_batch=8 / plan_max_len=2048
+# the reduced mamba2 ssm-BCdt projection gate flips between phases
+# (prefill's M=2048 reuse earns CiM a different verdict than decode's
+# M=8 GEMV) while e.g. batch 4 gates both phases identically.
+MIXED_ARCH, MIXED_BATCH, MIXED_LEN = "mamba2-780m", 8, 2048
+
+
+# --- per-phase planning ------------------------------------------------------
+
+def test_phase_tables_differ_on_mixed_verdict_arch():
+    """The two serving phases produce genuinely different verdict
+    tables on the mixed arch, the flip is a *projection* label (a gate
+    the runtime actually consults), and the quantized core wires each
+    phase's execution table from its own verdicts."""
+    cfg = reduced(ARCHS[MIXED_ARCH])
+    core = DecodeCore(cfg, RC, None, plan_batch=MIXED_BATCH,
+                      plan_max_len=MIXED_LEN)
+    tables = core.phase_verdict_tables
+    assert set(tables) == {"prefill", "decode"}
+    flips = tables["decode"].flips(tables["prefill"])
+    proj_flips = [lab for lab in flips if is_projection_label(lab)]
+    assert "ssm-BCdt" in proj_flips, flips
+    # verdict_table stays the decode phase's view
+    assert core.verdict_table == tables["decode"]
+
+
+def test_phase_gemms_of_model_shapes():
+    """Prefill GEMMs carry M = seq_len, decode GEMMs M = batch — the
+    structural asymmetry the per-phase verdicts come from."""
+    cfg = ARCHS["mistral-nemo-12b"]
+    phases = phase_gemms_of_model(cfg, 2048, 8)
+    pre = {g.label: g for g in phases["prefill"]}
+    dec = {g.label: g for g in phases["decode"]}
+    assert pre[f"{cfg.name} Wq"].M == 2048
+    assert dec[f"{cfg.name} Wq"].M == 8
+    # same projection label set in both phases (activation-score labels
+    # may legitimately differ per phase)
+    pp = {l for l in pre if is_projection_label(l)}
+    dp = {l for l in dec if is_projection_label(l)}
+    assert pp == dp
+
+
+def test_plan_workload_by_phase_empty_phase_raises():
+    """A phase with zero eligible GEMMs must raise, not return an empty
+    plan — an empty aggregate would silently ungate that phase."""
+    cfg = ARCHS["mistral-nemo-12b"]
+    phases = phase_gemms_of_model(cfg, 64, 2)
+    with pytest.raises(ValueError, match="zero eligible GEMMs"):
+        plan_workload_by_phase({**phases, "decode": []})
+    with pytest.raises(ValueError, match="at least one phase"):
+        plan_workload_by_phase({})
+
+
+# --- one executable per phase ------------------------------------------------
+
+def test_mixed_verdict_core_compiles_one_executable_per_phase():
+    """On the mixed arch the phases gate differently -> two distinct
+    plan tables, two programs — but each phase still compiles exactly
+    once, no matter how much traffic runs through it."""
+    cfg = reduced(ARCHS[MIXED_ARCH])
+    params = init(jax.random.PRNGKey(1), cfg)
+    s = ServeSession(cfg, RC, params, max_len=MIXED_LEN,
+                     batch=MIXED_BATCH, quantize=True)
+    assert s.prefill_plan_table != s.plan_table
+    assert s.prefill_plan_table is not s.plan_table
+    prompt = jax.random.randint(jax.random.PRNGKey(2),
+                                (MIXED_BATCH, 6), 0, cfg.vocab)
+    s.generate(prompt, n_new=4)
+    s.reset()
+    s.generate(prompt, n_new=3)
+    # each phase's step traced exactly one program (None only if the
+    # private jax jit-cache probe disappears)
+    assert s.decode_executables in (1, None)
+    assert s.prefill_executables in (1, None)
+    # distinct programs: the phase steps are different jitted callables
+    assert s._prefill_step is not s._step
+
+
+def test_identical_phase_plans_share_one_program():
+    """When no *projection* gate flips between phases the execution
+    tables are aliased and both phases run the same compiled step —
+    activation-score labels (phase-specific, never gated) must not
+    force a redundant second program."""
+    cfg = reduced(ARCHS[MIXED_ARCH])
+    params = init(jax.random.PRNGKey(1), cfg)
+    s = ServeSession(cfg, RC, params, max_len=64, batch=4, quantize=True)
+    assert s.prefill_plan_table is s.plan_table
+    assert s._prefill_step is s._step
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (4, 5), 0,
+                                cfg.vocab)
+    s.generate(prompt, n_new=4)
+    assert s.decode_executables in (1, None)
+    assert s.prefill_executables in (1, None)
+
+
+def test_scheduler_switches_phase_tables_under_traffic():
+    """The continuous-batching engine selects the prefill table on
+    pure-prefill steps and flips back for decode, counting switches in
+    telemetry; the total compiled variants stay at the number of
+    distinct phase plans."""
+    cfg = reduced(ARCHS[MIXED_ARCH])
+    params = init(jax.random.PRNGKey(1), cfg)
+    core = DecodeCore(cfg, RC, params, quantize=True,
+                      plan_batch=MIXED_BATCH, plan_max_len=MIXED_LEN)
+    assert core.prefill_plan_table != core.plan_table
+    eng = ContinuousBatchingEngine(core, n_slots=4, max_len=32)
+    prompts = np.arange(4 * 3, dtype=np.int32).reshape(4, 3) % cfg.vocab
+    tel_all = eng.run([Request(rid=i, prompt=prompts[i],
+                               max_new_tokens=4) for i in range(4)])
+    tel = tel_all["aggregate"]["phase_gating"]
+    assert tel["enabled"] is True
+    assert tel["phase_switches"] >= 1        # prefill -> decode at least
+    assert tel["phase_steps"]["prefill"] >= 1
+    assert tel["phase_steps"]["decode"] >= 1
+    assert (tel["phase_steps"]["prefill"] + tel["phase_steps"]["decode"]
+            == eng.steps)
+    # one compiled batch-step per distinct phase plan, nothing more
+    assert core.batch_decode_executables in (2, None)
+
+
+# --- widened-precision routes: INT4 / FP8 gated execution --------------------
+
+@pytest.mark.parametrize("precision,routes", [
+    ("int4", {"cim-int4-pallas", "int4-dequant-xla"}),
+    ("fp8", {"cim-fp8-pallas", "fp8-dequant-xla"}),
+])
+def test_gated_vs_ungated_parity_lowbit(precision, routes):
+    """Acceptance for the runtime What axis: a quantized session at
+    INT4/FP8 routes at least one projection through the low-bit CiM
+    Pallas path and at least one through the dequant-XLA path
+    (verdict-dependent), matches the ungated program within kernel
+    tolerance, and generates identical tokens — same low-bit weights,
+    routing the only difference.  One executable per phase throughout."""
+    cfg = reduced(ARCHS[MIXED_ARCH])
+    params = init(jax.random.PRNGKey(1), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (8, 5), 0,
+                                cfg.vocab)
+    gated = ServeSession(cfg, RC, params, max_len=16, batch=8,
+                         quantize=True, precision=precision)
+    seen = {r["route"] for r in gated.route_report().values()}
+    assert routes <= seen, seen
+
+    ungated = ServeSession(cfg, RC, params, max_len=16, batch=8,
+                           quantize=True, gated=False,
+                           precision=precision)
+    lg = np.asarray(gated.prefill(prompt), np.float32)
+    lu = np.asarray(ungated.prefill(prompt), np.float32)
+    np.testing.assert_allclose(lg, lu, rtol=5e-2, atol=5e-2)
+
+    out_g = gated.generate(prompt[:, -1:], n_new=4)
+    out_u = ungated.generate(prompt[:, -1:], n_new=4)
+    np.testing.assert_array_equal(np.asarray(out_g), np.asarray(out_u))
+    assert gated.decode_executables in (1, None)
+    assert gated.prefill_executables in (1, None)

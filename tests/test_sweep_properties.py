@@ -44,14 +44,26 @@ DIMS = (1, 3, 17, 31, 64, 100, 257, 300, 1024, 4096)
 dim = st.sampled_from(DIMS)
 gemm_shape = st.tuples(dim, dim, dim)
 
+# the widened What axis: every precision the cost model supports, as
+# (bits, fp) pairs.  INT8 first: it is the Table-IV calibration identity
+# and the boundary case both real hypothesis and the stub emit first.
+PRECISIONS = ((8, False), (4, False), (8, True))
+precision = st.sampled_from(PRECISIONS)
+
 
 @st.composite
 def cim_cases(draw):
-    """(GEMM, config name, order_mode): one planner cost-model query."""
+    """(GEMM, config name, order_mode): one planner cost-model query.
+
+    Draws span the full widened grid: GEMM shape x precision
+    (INT8/INT4/FP8) x config (all four Table-IV prototypes — both
+    analog and digital kinds — at RF/SMEM-A/SMEM-B) x order mode."""
     m, n, k = draw(gemm_shape)
+    bits, fp = draw(precision)
     name = draw(st.sampled_from(CONFIG_NAMES))
     greedy = draw(st.booleans())
-    return GEMM(m, n, k), name, "greedy" if greedy else "exact"
+    return (GEMM(m, n, k, bits=bits, fp=fp), name,
+            "greedy" if greedy else "exact")
 
 
 @given(case=cim_cases())
@@ -84,12 +96,13 @@ def _tie_ok(name_a, name_b, decision, tol=0.02):
 
 @given(shape=st.tuples(st.sampled_from(DIMS[:8]), st.sampled_from(DIMS[:8]),
                        st.sampled_from(DIMS[:8])),
-       greedy=st.booleans())
+       prec=precision, greedy=st.booleans())
 @settings(max_examples=4, deadline=None)
-def test_verdict_parity_three_backends(shape, greedy):
+def test_verdict_parity_three_backends(shape, prec, greedy):
     """Full decide() verdicts (what/when/where over all 12 standard
-    configs + baseline) agree across scalar, vectorized and pallas."""
-    g = GEMM(*shape)
+    configs + baseline) agree across scalar, vectorized and pallas —
+    at every precision of the widened What axis."""
+    g = GEMM(*shape, bits=prec[0], fp=prec[1])
     om = "greedy" if greedy else "exact"
     ds = decide(g, CONFIGS, order_mode=om, backend="scalar")
     dv = decide(g, CONFIGS, order_mode=om, backend="vectorized")
@@ -120,15 +133,18 @@ raw_row = st.tuples(dim, dim, dim,                      # M, N, K
                     map_field, map_field,               # k_arr, n_arr
                     map_field, map_field,               # pk, pn
                     map_field, map_field, map_field,    # m1, fk, fn
-                    st.sampled_from(CONFIG_NAMES))
+                    st.sampled_from(CONFIG_NAMES),
+                    precision)                          # (bits, fp)
 
 
 def _raw_batch(rows):
     batch = {f: [] for f in FLAT_FIELDS}
     for row in rows:
         m, n, k = row[0], row[1], row[2]
+        bits, fp = row[11]
         vals = dict(zip(MAP_FIELDS, row[3:10]))
-        vals.update({"M": m, "N": n, "K": k}, **config_row(CONFIGS[row[10]]))
+        vals.update({"M": m, "N": n, "K": k, "bits": bits, "is_fp": int(fp)},
+                    **config_row(CONFIGS[row[10]]))
         for f in FLAT_FIELDS:
             batch[f].append(float(vals[f]))
     return {f: np.asarray(v, np.float32) for f, v in batch.items()}
@@ -152,6 +168,32 @@ def test_raw_rows_xla_vs_pallas_bitwise(rows, greedy):
     # mapping exceeds the array bounds is invalid in BOTH kernels
     k_over = batch["k_arr"] > batch["k_rows"]
     assert not np.asarray(out_p["valid"])[k_over].any()
+
+
+@pytest.mark.slow
+def test_full_grid_three_backend_parity_exhaustive():
+    """The @slow full-grid gate: EVERY (shape, precision, order-mode)
+    combination of a representative shape set — degenerate GEMV,
+    awkward primes, paper-scale pow2 — decided by all three backends
+    over all 12 standard configs + baseline, no sampling.  The fast
+    tier draws from this grid; this job walks it exhaustively."""
+    shapes = ((1, 1, 1), (1, 4096, 4096), (17, 100, 300),
+              (64, 1024, 4096), (300, 257, 31), (1024, 1024, 1024))
+    for shape in shapes:
+        for bits, fp in PRECISIONS:
+            g = GEMM(*shape, bits=bits, fp=fp)
+            for om in ("exact", "greedy"):
+                ds = decide(g, CONFIGS, order_mode=om, backend="scalar")
+                dv = decide(g, CONFIGS, order_mode=om,
+                            backend="vectorized")
+                dp = decide(g, CONFIGS, order_mode=om, backend="pallas")
+                assert dp.use_cim == dv.use_cim == ds.use_cim, (g, om)
+                assert (dp.best_energy == dv.best_energy
+                        or _tie_ok(dp.best_energy, dv.best_energy, ds)), (
+                    g, om)
+                assert (dv.best_energy == ds.best_energy
+                        or _tie_ok(dv.best_energy, ds.best_energy, ds)), (
+                    g, om)
 
 
 def test_degenerate_all_ones_gemm_all_backends():
